@@ -1,0 +1,29 @@
+"""Shared helpers for the per-figure benchmark modules."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def emit(rows: List[Dict[str, Any]], name: str) -> List[Dict[str, Any]]:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    for r in rows:
+        fields = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{fields}", flush=True)
+    return rows
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

@@ -1,0 +1,53 @@
+"""Paper Fig 12: DML training throughput (images/sec) per protocol per
+non-congestion loss rate, for the compute-bound (ResNet50-like, 98MB) and
+communication-bound (VGG16-like, 528MB) operating points.
+
+BST comes from the packet-level DES (scaled sizes, rescaled back — see
+scale arg); compute time per batch is fixed at the paper's testbed-scale
+values (T4-class GPU): 50 ms for the 98MB model, 90 ms for the 528MB one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config import NetConfig
+from repro.net.scenarios import train_iterations
+
+from benchmarks.common import emit
+
+MODELS = {
+    "resnet50_98MB": {"bytes": 98e6, "compute": 0.050, "batch": 256},
+    "vgg16_528MB": {"bytes": 528e6, "compute": 0.090, "batch": 256},
+}
+
+
+def run(quick: bool = True):
+    rows = []
+    losses = [0.0, 0.001, 0.01] if quick else [0.0, 0.0001, 0.001, 0.005, 0.01]
+    iters = 6 if quick else 12
+    scale = 0.02 if quick else 0.05
+    models = ["resnet50_98MB"] if quick else list(MODELS)
+    for mname in models:
+        m = MODELS[mname]
+        for loss in losses:
+            net = NetConfig(10, 1, loss, 4096)
+            base_tput = {}
+            for proto in ["ltp", "bbr", "cubic", "reno"]:
+                r = train_iterations(proto, net, 8, m["bytes"], iters=iters,
+                                     scale=scale, seed=21)
+                step_time = m["compute"] + float(r["bst"].mean())
+                tput = m["batch"] / step_time
+                base_tput[proto] = tput
+                rows.append({
+                    "model": mname, "loss": loss, "protocol": proto,
+                    "images_per_sec": round(tput, 1),
+                    "bst_mean_s": round(float(r["bst"].mean()), 4),
+                    "delivered": round(float(r["delivered"].mean()), 3),
+                    "speedup_vs_proto": round(
+                        base_tput["ltp"] / tput, 2) if proto != "ltp" else 1.0,
+                })
+    return emit(rows, "fig12_throughput")
+
+
+if __name__ == "__main__":
+    run(quick=False)

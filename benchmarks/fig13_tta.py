@@ -1,0 +1,57 @@
+"""Paper Fig 13: time-to-accuracy — does LTP's partial gradient loss cost
+final accuracy or convergence time? Full training loop (PSTrainer) with
+transport-modelled wall-clock; reports sim-time to reach the accuracy
+target plus final accuracy per protocol per loss rate."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.models.cnn import accuracy
+from repro.optim import make_optimizer
+from repro.train import PSTrainer
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    cfg = get_config("papernet").replace(d_model=8 if quick else 16,
+                                         n_layers=3 if quick else 6)
+    api = build(cfg)
+    steps = 40 if quick else 150
+    tc = TrainConfig(batch=128, lr=0.05, steps=steps)
+    data = SyntheticCIFAR(seed=5)
+    test = {k: jnp.asarray(v) for k, v in data.test_set(1024).items()}
+    eval_every = 10
+    target = 0.2 if quick else 0.45
+    rows = []
+    losses = [0.0, 0.01] if quick else [0.0, 0.001, 0.01]
+    for loss in losses:
+        net = NetConfig(10, 1, loss, 4096)
+        for proto in ["ltp", "bbr", "cubic"]:
+            tr = PSTrainer(api, make_optimizer(tc), tc, LTPConfig(), net,
+                           n_workers=8, protocol=proto, compute_time=0.05,
+                           seed=0)
+            hist = tr.run(batches(data, tc.batch, steps), epoch_steps=20,
+                          eval_fn=lambda p: accuracy(cfg, p, test),
+                          eval_every=eval_every)
+            evals = [(h["sim_time"], h["eval"]) for h in hist if "eval" in h]
+            tta = next((t for t, a in evals if a >= target), None)
+            rows.append({
+                "loss": loss, "protocol": proto,
+                "final_acc": round(evals[-1][1], 4) if evals else None,
+                "tta_s_to_{:.2f}".format(target):
+                    round(tta, 1) if tta else "not_reached",
+                "final_loss": round(hist[-1]["loss"], 4),
+                "delivered": round(float(np.mean([h["delivered"] for h in hist])), 3),
+                "total_sim_time_s": round(tr.sim_time, 1),
+            })
+    return emit(rows, "fig13_tta")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,28 @@
+"""Paper Fig 15: bandwidth shares when LTP coexists with other congestion
+controls on one bottleneck."""
+from __future__ import annotations
+
+from repro.config import NetConfig
+from repro.net.scenarios import fairness_share
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    rows = []
+    dur = 0.15 if quick else 0.5
+    pairs = [("ltp", "bbr")] if quick else \
+        [("ltp", "bbr"), ("ltp", "cubic"), ("bbr", "bbr"), ("ltp", "ltp")]
+    for a, b in pairs:
+        sa, sb = fairness_share(a, b, NetConfig(10, 1, 0.0, 4096),
+                                duration=dur, seed=0)
+        rows.append({
+            "proto_a": a, "proto_b": b,
+            "share_a": round(sa, 3), "share_b": round(sb, 3),
+            "a_vs_b_ratio": round(sa / max(sb, 1e-9), 3),
+        })
+    return emit(rows, "fig15_fairness")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,42 @@
+"""Paper Fig 3: long-tail FCT distribution under 8-to-1 incast (DES),
+and Fig 14: batch-synchronization-time distribution normalized to LTP."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config import NetConfig
+from repro.net.scenarios import incast_gather
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    rows = []
+    iters = 8 if quick else 20
+    size = 2e6 if quick else 4.9e6
+    losses = [0.0, 0.001] if quick else [0.0, 0.0001, 0.001, 0.005, 0.01]
+    for loss in losses:
+        net = NetConfig(10, 1, loss, 4096)
+        ltp_bst = None
+        for proto in ["ltp", "bbr", "cubic", "reno"]:
+            rs = incast_gather(proto, net, 8, size, iters=iters, seed=11)
+            fct = np.concatenate([r.fcts for r in rs])
+            bst = np.array([r.bst_gather for r in rs])
+            delivered = float(np.mean([r.delivered.mean() for r in rs]))
+            if proto == "ltp":
+                ltp_bst = bst.mean()
+            rows.append({
+                "loss": loss, "protocol": proto,
+                "fct_p50_ms": round(float(np.percentile(fct, 50)) * 1e3, 2),
+                "fct_p95_ms": round(float(np.percentile(fct, 95)) * 1e3, 2),
+                "fct_p99_ms": round(float(np.percentile(fct, 99)) * 1e3, 2),
+                "bst_mean_ms": round(float(bst.mean()) * 1e3, 2),
+                "bst_p95_ms": round(float(np.percentile(bst, 95)) * 1e3, 2),
+                "bst_norm_to_ltp": round(float(bst.mean() / ltp_bst), 3),
+                "delivered": round(delivered, 3),
+            })
+    return emit(rows, "fig3_14_incast_fct_bst")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,85 @@
+"""Paper Fig 5: Top-k vs Random-k — top-1 accuracy and relative throughput
+on the CIFAR-like workload (motivates LTP's Random-k-like loss profile).
+
+Throughput model mirrors the paper's observation: Top-k pays a selection
+overhead proportional to the gradient size (sort/threshold work on the
+worker), Random-k is nearly free; both send k% of the data.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import compression
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.models.cnn import accuracy
+from repro.optim import make_optimizer
+
+from benchmarks.common import emit
+
+
+def _train(cfg, api, tc, data, test, kind: str, k: float, steps: int):
+    opt = make_optimizer(tc)
+    params = api.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    residual = None
+    key = jax.random.PRNGKey(1)
+
+    @jax.jit
+    def step(params, state, batch, key, residual_flat):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch))(params)
+        return loss, grads
+
+    sel_times = []
+    for i, b in enumerate(batches(data, tc.batch, steps)):
+        b = {k2: jnp.asarray(v) for k2, v in b.items()}
+        loss, grads = step(params, state, b, key, residual)
+        t0 = time.perf_counter()
+        if kind == "topk":
+            grads, residual = compression.top_k(grads, k, residual)
+            jax.block_until_ready(jax.tree.leaves(grads)[0])
+        elif kind == "randomk":
+            key, sub = jax.random.split(key)
+            grads, residual = compression.random_k(grads, k, sub, residual)
+            jax.block_until_ready(jax.tree.leaves(grads)[0])
+        sel_times.append(time.perf_counter() - t0)
+        upd, state = opt.update(grads, state, params, jnp.float32(tc.lr))
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    acc = float(accuracy(cfg, params, test))
+    return acc, float(np.median(sel_times))
+
+
+def run(quick: bool = True):
+    cfg = get_config("papernet").replace(d_model=8 if quick else 16,
+                                         n_layers=3 if quick else 6)
+    api = build(cfg)
+    tc = TrainConfig(batch=128, lr=0.05)
+    steps = 30 if quick else 120
+    data = SyntheticCIFAR(seed=3)
+    test = {k: jnp.asarray(v) for k, v in data.test_set(1024).items()}
+    ks = [0.1, 0.4] if quick else [0.05, 0.1, 0.2, 0.3, 0.4, 0.7]
+    rows = []
+    base_acc, _ = _train(cfg, api, tc, data, test, "none", 1.0, steps)
+    rows.append({"kind": "dense", "k": 1.0, "top1": round(base_acc, 4),
+                 "rel_throughput": 1.0})
+    for k in ks:
+        for kind in ["randomk", "topk"]:
+            acc, sel = _train(cfg, api, tc, data, test, kind, k, steps)
+            # throughput: compute+comm fixed; selection overhead differs
+            base_step = 0.05 + 0.02
+            rel = base_step / (base_step + sel)
+            rows.append({"kind": kind, "k": k, "top1": round(acc, 4),
+                         "sel_overhead_ms": round(sel * 1e3, 2),
+                         "rel_throughput": round(rel, 3)})
+    return emit(rows, "fig5_randomk_topk")
+
+
+if __name__ == "__main__":
+    run(quick=False)

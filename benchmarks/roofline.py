@@ -1,0 +1,149 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh), the three
+terms from the compiled dry-run artifact:
+
+  compute_s    = per-device HLO dot/conv FLOPs / 197 TFLOP/s   (v5e bf16)
+  memory_s     = per-device HLO bytes accessed / 819 GB/s
+  collective_s = per-device collective bytes / 50 GB/s ICI
+
+(The SPMD module is the per-device program, so walker numbers are already
+per-chip; multiplying by chips and dividing by chips*peak cancels.)
+
+MODEL_FLOPS = 6*N(active)*tokens for train, 2*N(active)*tokens for
+inference — the "useful work"; the ratio MODEL_FLOPS / (chips * HLO_FLOPs)
+exposes remat/recompute/dispatch waste.
+
+Requires the dry-run sweep to have run (benchmarks/dryrun_results/*.json).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import build
+from repro.shapes import get_shape
+
+from benchmarks.common import DRYRUN_DIR, emit
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def param_counts(arch: str) -> Dict[str, float]:
+    """Total and active (per-token) parameter counts."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    cfg = get_config(arch)
+    api = build(cfg)
+    sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    total = routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(sds)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        if any("experts_" in str(getattr(p, "key", "")) for p in path):
+            routed += n
+    active = total - routed
+    if cfg.n_experts > 0 and routed:
+        active += routed * cfg.top_k / cfg.n_experts
+    out = {"total": float(total), "active": float(active)}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def _attn_flops_per_seq(cfg, s: int, decode: bool) -> float:
+    """Forward attention-score+PV FLOPs per sequence (excluded from 2ND)."""
+    total = 0.0
+    for code in cfg.pattern_layers:
+        if code in ("A", "W", "L"):
+            hd = (cfg.qk_nope_dim + cfg.qk_rope_dim) if code == "L" else cfg.hd
+            h = cfg.n_heads
+            if decode:
+                kv = s  # one token vs full cache
+                total += 4.0 * h * hd * kv
+            else:
+                kv_avg = (s + 1) / 2.0
+                if code == "W" and cfg.window > 0:
+                    kv_avg = min(kv_avg, float(cfg.window))
+                total += 4.0 * h * hd * s * kv_avg
+    if cfg.shared_attn_every > 0:  # zamba2 shared block applications
+        napp = len(cfg.pattern_layers) // cfg.shared_attn_every
+        per = 4.0 * cfg.n_heads * cfg.hd * (s if decode else s * (s + 1) / 2.0)
+        total += napp * per
+    if cfg.family == "audio":  # encoder self + decoder cross attention
+        f = cfg.encoder_frames
+        total += cfg.encoder_layers * 4.0 * cfg.n_heads * cfg.hd * f * f
+        total += cfg.n_layers * 4.0 * cfg.n_heads * cfg.hd * (1 if decode else s) * f
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful FLOPs: 2*N_active per token (x3 for train) + attention."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n = param_counts(arch)["active"]
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return (6.0 * n * s + 3.0 * _attn_flops_per_seq(cfg, s, False)) * b
+    if shape.kind == "prefill":
+        return (2.0 * n * s + _attn_flops_per_seq(cfg, s, False)) * b
+    return (2.0 * n + _attn_flops_per_seq(cfg, s, True)) * b
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok") or "skipped" in rec or "walker" not in rec:
+        return None
+    w = rec["walker"]
+    n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    compute_s = w["flops"] / PEAK_FLOPS_BF16
+    memory_s = w["bytes"] / HBM_BW
+    collective_s = w["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = w["flops"] * n_chips
+    ratio = mf / hlo_global if hlo_global else 0.0
+    hints = {
+        "compute": "at the compute roof — raise MFU via larger per-chip "
+                   "tiles or drop remat on cheap layers",
+        "memory": "HBM-bound — fuse elementwise chains, keep activations "
+                  "bf16, shrink attention transients",
+        "collective": "ICI-bound — reshard to cut all-gathers (head/expert "
+                      "parallel), overlap collectives with compute",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": rec["step"], "ltp": rec.get("ltp", False),
+        "compute_s": round(compute_s, 6),
+        "memory_s": round(memory_s, 6),
+        "collective_s": round(collective_s, 6),
+        "dominant": dominant,
+        "model_flops": f"{mf:.3e}",
+        "hlo_flops_global": f"{hlo_global:.3e}",
+        "useful_ratio": round(ratio, 3),
+        "temp_gib": round(
+            rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30, 2),
+        "hint": hints[dominant],
+    }
+
+
+def run(quick: bool = True):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(f))
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    if not rows:
+        rows = [{"note": "no dryrun results found — run "
+                         "python -m repro.launch.dryrun --all first"}]
+    return emit(rows, "roofline")
+
+
+if __name__ == "__main__":
+    run(quick=False)

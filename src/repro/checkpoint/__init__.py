@@ -1,0 +1,1 @@
+from repro.checkpoint.io import save_checkpoint, restore_checkpoint  # noqa: F401

@@ -1,0 +1,53 @@
+"""Checkpointing: pytree <-> .npz with slash-joined key paths.
+
+Host-gathered (fine at example scale; a sharded production store would
+write per-device shards — out of scope for the CPU container, noted in
+DESIGN.md)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays: Dict[str, np.ndarray] = {
+        _path_str(p): np.asarray(v) for p, v in flat
+    }
+    arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def restore_checkpoint(path: str, like: Any):
+    """Restores into the structure of ``like``. Returns (tree, step)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    step = int(data["__step__"])
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, old in flat:
+        key = _path_str(p)
+        arr = data[key]
+        assert arr.shape == tuple(old.shape), (key, arr.shape, old.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=old.dtype))
+    _, treedef2 = jax.tree_util.tree_flatten(like)
+    return jax.tree_util.tree_unflatten(treedef2, leaves), step

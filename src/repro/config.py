@@ -1,0 +1,163 @@
+"""Config system for the LTP reproduction framework.
+
+Plain dataclasses (no external deps). Every assigned architecture is described
+by a ``ModelConfig``; the transport/protocol knobs live in ``NetConfig`` and
+``LTPConfig``; training in ``TrainConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``block_pattern`` drives the per-layer mixer choice; it is tiled to
+    ``n_layers``.  Codes: 'A' full attention, 'W' sliding-window attention,
+    'M' mamba1, 'M2' mamba2, 'L' MLA (deepseek latent attention).
+    """
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    block_pattern: Tuple[str, ...] = ("A",)
+    window: int = 0                  # sliding window size for 'W' layers
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden (d_ff used if 0)
+    first_dense_layers: int = 0      # leading dense layers before MoE starts
+    # --- SSM (mamba) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_heads: int = 0               # mamba2 heads (d_inner // head size)
+    # --- MLA (deepseek) ---
+    kv_lora: int = 0
+    q_lora: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- hybrid (zamba2): shared attention block every N mixer layers ---
+    shared_attn_every: int = 0
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 0          # stubbed conv-frontend output length
+    # --- vlm (qwen2-vl) ---
+    vision_patches: int = 0          # stubbed ViT output length
+    mrope_sections: Tuple[int, ...] = ()
+    # --- misc ---
+    norm_type: str = "rms"           # rms | ln
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    pos_type: str = "rope"           # rope | mrope | learned | none
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    source: str = ""                 # citation
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def vocab_padded(self) -> int:
+        return _round_up(self.vocab, 128)
+
+    @property
+    def pattern_layers(self) -> Tuple[str, ...]:
+        """Per-layer mixer codes, length n_layers."""
+        reps = (self.n_layers + len(self.block_pattern) - 1) // len(self.block_pattern)
+        return (self.block_pattern * reps)[: self.n_layers]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class LTPConfig:
+    """Paper knobs (§III). Defaults follow the paper where it gives numbers."""
+
+    enabled: bool = True
+    mtu_bytes: int = 1500
+    header_bytes: int = 9            # LTP adds ~9B (68 bit) header over UDP
+    udp_ip_overhead: int = 28
+    packet_floats: int = 360         # payload floats, float-aligned (padding bubble)
+    data_pct_threshold: float = 0.8  # Early Close received-data percentage
+    lt_init_rtprop_mult: float = 1.5 # LTThreshold_init = 1.5*RTprop + Size/BtlBw
+    deadline_c_ms: float = 30.0      # C: 30ms DCN / 100ms WAN
+    compensation: str = "paper"      # paper | count | expected
+    error_feedback: bool = False     # beyond-paper
+    critical_per_tensor: int = 1     # first/last packet(s) of each tensor marked critical
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Simulated physical network (per-link)."""
+
+    bandwidth_gbps: float = 10.0
+    rtprop_ms: float = 1.0
+    loss_rate: float = 0.0           # non-congestion random loss
+    queue_pkts: int = 256            # droptail switch queue
+    mtu_bytes: int = 1500
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch: int = 32
+    seq: int = 256
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    optimizer: str = "sgdm"          # sgdm | adamw
+    steps: int = 100
+    lr_decay_every: int = 0          # epochs; paper: x0.8 every 10 epochs
+    lr_decay: float = 0.8
+    seed: int = 0
+    remat: bool = True
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    ltp: LTPConfig = field(default_factory=LTPConfig)
+    net: NetConfig = field(default_factory=NetConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)

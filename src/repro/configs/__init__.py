@@ -1,0 +1,57 @@
+"""Registry of assigned architectures (+ the paper's own model).
+
+Each submodule exposes ``CONFIG`` (the exact assigned full-size config) and
+``REDUCED`` (a same-family smoke variant: <=2 layers of each kind,
+d_model<=512, <=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "yi_34b",
+    "mixtral_8x22b",
+    "smollm_360m",
+    "falcon_mamba_7b",
+    "qwen2_vl_72b",
+    "gemma3_1b",
+    "qwen3_14b",
+    "whisper_small",
+    "zamba2_7b",
+    "deepseek_v2_236b",
+    "papernet",
+]
+
+_ALIASES = {
+    "yi-34b": "yi_34b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "smollm-360m": "smollm_360m",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen3-14b": "qwen3_14b",
+    "whisper-small": "whisper_small",
+    "zamba2-7b": "zamba2_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+}
+
+
+def _norm(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: loss-tolerant gradient synchronization.
+
+  packets.py      float-aligned packetization + critical packets (SIII-C/E)
+  early_close.py  LT-threshold / deadline controller (SIII-B)
+  ltp_sync.py     masked-psum gradient sync under shard_map (the JAX core)
+  compression.py  Top-k / Random-k baselines (SII-C)
+"""
+from repro.core.early_close import (  # noqa: F401
+    AnalyticIncastModel,
+    EarlyCloseController,
+    broadcast_time,
+)
+from repro.core.ltp_sync import LTPSync, make_ltp_sync  # noqa: F401
+from repro.core.packets import PacketPlan, make_plan  # noqa: F401

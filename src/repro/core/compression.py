@@ -1,0 +1,74 @@
+"""Gradient-compression baselines from the paper's §II-C (Fig 5): Top-k and
+Random-k sparsification, with optional error feedback — used to reproduce
+the accuracy/throughput comparison that motivates LTP's Random-k-like
+behaviour, and to demonstrate LTP composing with compression (§VI-A).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(grads) -> Tuple[jnp.ndarray, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
+    return flat, (treedef, [(l.shape, l.dtype) for l in leaves])
+
+
+def _unflatten(flat, meta):
+    treedef, shapes = meta
+    out, off = [], 0
+    for shape, dtype in shapes:
+        sz = int(np.prod(shape)) if shape else 1
+        out.append(flat[off : off + sz].reshape(shape).astype(dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+import numpy as np  # noqa: E402  (used in _unflatten)
+
+
+def random_k(grads, k_frac: float, key, residual=None):
+    """Keep a random k-fraction of gradient elements (Random-k [26]).
+
+    Returns (sparse_grads, new_residual). Residual (error feedback) is in
+    flat space; pass the previous call's output back in.
+    """
+    flat, meta = _flatten(grads)
+    if residual is not None:
+        flat = flat + residual
+    mask = (jax.random.uniform(key, flat.shape) < k_frac).astype(flat.dtype)
+    kept = flat * mask
+    new_res = flat - kept
+    return _unflatten(kept, meta), new_res
+
+
+def top_k(grads, k_frac: float, residual=None, *, sample_cap: int = 1 << 20):
+    """Keep the top k-fraction by |value| (Top-k [21]).
+
+    The threshold is the (1-k) quantile of |g|; for very large gradients it
+    is estimated on a strided sample (exact enough for the Fig-5 sweep and
+    far cheaper than a full sort — mirroring the paper's note that Top-k's
+    selection overhead is its weakness).
+    """
+    flat, meta = _flatten(grads)
+    if residual is not None:
+        flat = flat + residual
+    a = jnp.abs(flat)
+    if flat.size > sample_cap:
+        stride = flat.size // sample_cap
+        a_est = a[::stride]
+    else:
+        a_est = a
+    thresh = jnp.quantile(a_est, jnp.clip(1.0 - k_frac, 0.0, 1.0))
+    mask = (a >= thresh).astype(flat.dtype)
+    kept = flat * mask
+    new_res = flat - kept
+    return _unflatten(kept, meta), new_res
+
+
+def measure_density(grads) -> jnp.ndarray:
+    flat, _ = _flatten(grads)
+    return jnp.mean((flat != 0).astype(jnp.float32))

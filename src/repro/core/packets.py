@@ -1,0 +1,150 @@
+"""Packetization of gradient pytrees (paper §III-C, §III-E, §IV-A).
+
+The gradient pytree is flattened into one contiguous float stream and cut
+into fixed-size packets (payload = ``packet_floats`` float32 values). The
+paper's *padding bubble* guarantees no float straddles a packet boundary;
+we generalize it: payloads are whole-float (and, on the TPU kernel path,
+whole-lane: 128-float multiples). The stream tail is zero-padded to a
+whole packet.
+
+*Critical packets* (§III-E): the packets containing the first/last elements
+of each tensor ("indispensable bytes of the matrix ... first and last part
+of the matrix bitstream") are always delivered.
+
+Sharded semantics: packetization happens per (worker=data-index,
+PS-shard=model-index) link — each model shard is its own PS, as in the
+paper's multi-PS deployment — so a ``PacketPlan`` is built from the LOCAL
+leaf shapes and no resharding is ever needed for the sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketPlan:
+    """Static description of the packet layout for one gradient pytree."""
+
+    packet_floats: int
+    n_floats: int                 # unpadded total float count
+    n_packets: int
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_offsets: Tuple[int, ...]  # float offset of each leaf in the stream
+    critical: np.ndarray           # (n_packets,) bool
+    treedef: Any
+
+    @property
+    def padded_floats(self) -> int:
+        return self.n_packets * self.packet_floats
+
+    @property
+    def n_critical(self) -> int:
+        return int(self.critical.sum())
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.packet_floats * 4
+
+
+def make_plan(
+    tree: Any,
+    packet_floats: int = 360,
+    critical_per_tensor: int = 1,
+) -> PacketPlan:
+    """Build the packet plan from a pytree of arrays or ShapeDtypeStructs."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offsets = tuple(int(x) for x in (np.cumsum([0] + sizes)[:-1]))
+    n_floats = int(sum(sizes))
+    n_packets = max(1, -(-n_floats // packet_floats))
+    critical = np.zeros((n_packets,), bool)
+    c = critical_per_tensor
+    for off, sz in zip(offsets, sizes):
+        first = off // packet_floats
+        last = (off + sz - 1) // packet_floats
+        critical[first : min(first + c, n_packets)] = True
+        critical[max(last - c + 1, 0) : last + 1] = True
+    return PacketPlan(
+        packet_floats=packet_floats,
+        n_floats=n_floats,
+        n_packets=n_packets,
+        leaf_shapes=shapes,
+        leaf_offsets=offsets,
+        critical=critical,
+        treedef=treedef,
+    )
+
+
+def flatten(plan: PacketPlan, tree: Any) -> jnp.ndarray:
+    """Pytree -> (n_packets, packet_floats) float32 stream (zero-padded)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
+    pad = plan.padded_floats - plan.n_floats
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(plan.n_packets, plan.packet_floats)
+
+
+def unflatten(plan: PacketPlan, packets: jnp.ndarray, dtypes: Sequence[Any] | None = None) -> Any:
+    """(n_packets, packet_floats) -> pytree with the plan's leaf shapes."""
+    flat = packets.reshape(-1)[: plan.n_floats]
+    leaves: List[jnp.ndarray] = []
+    for shape, off in zip(plan.leaf_shapes, plan.leaf_offsets):
+        sz = int(np.prod(shape)) if shape else 1
+        leaf = jax.lax.slice_in_dim(flat, off, off + sz).reshape(shape)
+        leaves.append(leaf)
+    if dtypes is not None:
+        leaves = [l.astype(d) for l, d in zip(leaves, dtypes)]
+    return jax.tree_util.tree_unflatten(plan.treedef, leaves)
+
+
+def delivery_mask(
+    plan: PacketPlan, key, delivered_frac, *, extra_critical=None
+) -> jnp.ndarray:
+    """Random per-packet delivery (threshold-controlled Random-k, §II-C).
+
+    ``delivered_frac`` may be a traced scalar in [0, 1]. Critical packets
+    are always delivered. Returns (n_packets,) float32 mask.
+    """
+    u = jax.random.uniform(key, (plan.n_packets,))
+    crit = jnp.asarray(plan.critical)
+    if extra_critical is not None:
+        crit = crit | extra_critical
+    return jnp.where(crit, 1.0, (u < delivered_frac).astype(jnp.float32))
+
+
+def local_shape(shape: Tuple[int, ...], spec, mesh) -> Tuple[int, ...]:
+    """Per-device block shape of a global array under a PartitionSpec."""
+    out = list(shape)
+    for dim, names in enumerate(spec):
+        if names is None:
+            continue
+        names = (names,) if isinstance(names, str) else tuple(names)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        assert out[dim] % total == 0, (shape, spec, dim)
+        out[dim] //= total
+    return tuple(out)
+
+
+def local_plan(
+    params_shape: Any, specs: Any, mesh, packet_floats: int = 360,
+    critical_per_tensor: int = 1,
+) -> PacketPlan:
+    """PacketPlan over LOCAL (per-device) leaf shapes given param specs."""
+    locals_ = jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            local_shape(tuple(sds.shape), spec, mesh), sds.dtype
+        ),
+        params_shape,
+        specs,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+    return make_plan(locals_, packet_floats, critical_per_tensor)

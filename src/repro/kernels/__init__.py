@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the LTP-sync hot loops (validated interpret=True
+on CPU; pass interpret=False on real TPUs).
+
+  dropfill.py       bubble-fill + compensation over packet tiles
+  packet_reduce.py  PS-side masked multi-worker reduce
+  randomk.py        Random-k sparsification
+  ops.py            jit'd padding-aware wrappers
+  ref.py            pure-jnp oracles
+"""
+from repro.kernels.ops import (  # noqa: F401
+    ltp_dropfill,
+    ltp_packet_reduce,
+    randomk_sparsify,
+)

@@ -1,0 +1,74 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to the kernels' tile constraints (lane-width payload,
+block-multiple packet counts) and strip it on the way out, so callers can
+use arbitrary packet geometries. ``interpret=True`` (the default here)
+executes the kernel body in Python on CPU; on a real TPU pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dropfill as _df
+from repro.kernels import packet_reduce as _pr
+from repro.kernels import randomk as _rk
+
+
+def _pad_to(x, m: int, axis: int):
+    r = x.shape[axis] % m
+    if r == 0:
+        return x, 0
+    pad = m - r
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ltp_dropfill(packets, mask, scale=None, *, interpret: bool = True):
+    """packets: (n_packets, payload) any-float; mask: (n_packets,) {0,1};
+    scale: optional (n_packets,) compensation. Zero-fills lost packets."""
+    if scale is None:
+        scale = jnp.ones_like(mask)
+    x, pad_p = _pad_to(packets.astype(jnp.float32), 128, 1)
+    x, pad_n = _pad_to(x, _df.BLOCK_P, 0)
+    m, _ = _pad_to(mask.astype(jnp.float32), _df.BLOCK_P, 0)
+    s, _ = _pad_to(scale.astype(jnp.float32), _df.BLOCK_P, 0)
+    out = _df.dropfill(x, m, s, interpret=interpret)
+    out = out[: packets.shape[0], : packets.shape[1]]
+    return out.astype(packets.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("compensation", "interpret"))
+def ltp_packet_reduce(packets, mask, *, compensation: str = "paper",
+                      interpret: bool = True):
+    """packets: (W, n_packets, payload); mask: (W, n_packets)."""
+    x, _ = _pad_to(packets.astype(jnp.float32), 128, 2)
+    x, _ = _pad_to(x, _pr.BLOCK_P, 1)
+    m, _ = _pad_to(mask.astype(jnp.float32), _pr.BLOCK_P, 1)
+    out = _pr.packet_reduce(x, m, compensation=compensation,
+                            interpret=interpret)
+    return out[: packets.shape[1], : packets.shape[2]]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def randomk_sparsify(x, u, k_frac, *, interpret: bool = True):
+    """Elementwise Random-k keep mask via uniforms ``u`` (same shape)."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    uf = u.reshape(-1)
+    n = flat.shape[0]
+    cols = _rk.BLOCK_C
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    flat = jnp.pad(flat, (0, pad)).reshape(rows, cols)
+    uf = jnp.pad(uf, (0, pad), constant_values=2.0).reshape(rows, cols)
+    flat, _ = _pad_to(flat, _rk.BLOCK_R, 0)
+    uf, _ = _pad_to(uf, _rk.BLOCK_R, 0)
+    # padded uniforms = 2.0 > k  ->  padding never kept
+    out = _rk.randomk(flat, uf, k_frac, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: PS-side masked multi-worker packet reduction.
+
+Aggregates W workers' packetized gradients with per-(worker, packet)
+delivery masks and bubble-fill compensation:
+
+    paper:  out[p] = sum_w g[w,p] * m[w,p] / W
+    count:  out[p] = sum_w g[w,p] * m[w,p] / max(sum_w m[w,p], 1)
+
+The worker dimension is accumulated *inside* the kernel (static unroll over
+W — typically 8..64), so each (BLOCK_P, payload) output tile is written once
+and each input tile is read once: one HBM pass, the roofline optimum for
+this memory-bound reduction. This is the TPU adaptation of the paper's PS
+aggregation hot loop (their C++ server thread).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 128
+
+
+def _reduce_kernel(pkts_ref, mask_ref, out_ref, *, n_workers: int,
+                   compensation: str):
+    """pkts: (W, BLOCK_P, payload); mask: (W, BLOCK_P, 1)."""
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    cnt = jnp.zeros((out_ref.shape[0], 1), jnp.float32)
+    for w in range(n_workers):          # static unroll
+        m = mask_ref[w]
+        acc = acc + pkts_ref[w].astype(jnp.float32) * m
+        cnt = cnt + m
+    if compensation == "count":
+        out_ref[...] = (acc / jnp.maximum(cnt, 1.0)).astype(out_ref.dtype)
+    else:
+        out_ref[...] = (acc / n_workers).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("compensation", "interpret"))
+def packet_reduce(packets, mask, *, compensation: str = "paper",
+                  interpret: bool = True):
+    """packets: (W, n_packets, payload) f32; mask: (W, n_packets) f32.
+
+    Requires payload % 128 == 0, n_packets % BLOCK_P == 0. Returns
+    (n_packets, payload) float32.
+    """
+    w, n, p = packets.shape
+    assert p % 128 == 0 and n % BLOCK_P == 0, (w, n, p)
+    mask3 = mask[..., None].astype(jnp.float32)
+    grid = (n // BLOCK_P,)
+    kernel = functools.partial(
+        _reduce_kernel, n_workers=w, compensation=compensation
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w, BLOCK_P, p), lambda i: (0, i, 0)),
+            pl.BlockSpec((w, BLOCK_P, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_P, p), lambda i: (i, 0)),
+        interpret=interpret,
+    )(packets, mask3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dropfill_ref(packets, mask, scale):
+    """Bubble-fill + compensation.
+
+    packets: (n_packets, payload) float; mask: (n_packets,) {0,1};
+    scale: (n_packets,) compensation multiplier.
+    out = packets * mask * scale (lost packets zero-filled — paper §III-C).
+    """
+    return packets * (mask * scale)[:, None].astype(packets.dtype)
+
+
+def packet_reduce_ref(packets, mask, *, compensation: str = "paper"):
+    """PS-side masked multi-worker aggregation.
+
+    packets: (W, n_packets, payload); mask: (W, n_packets) {0,1}.
+      paper: sum over delivered / W     (zero bubbles count in the mean)
+      count: sum over delivered / count (unbiased over deliverers)
+    Returns (n_packets, payload) float32.
+    """
+    w = packets.shape[0]
+    masked = packets.astype(jnp.float32) * mask[..., None].astype(jnp.float32)
+    tot = jnp.sum(masked, axis=0)
+    if compensation == "count":
+        cnt = jnp.maximum(jnp.sum(mask, axis=0), 1.0)
+        return tot / cnt[:, None]
+    return tot / w
+
+
+def randomk_ref(x, u, k_frac):
+    """Random-k sparsification: keep where u < k_frac (Random-k [26])."""
+    return jnp.where(u < k_frac, x, jnp.zeros_like(x))

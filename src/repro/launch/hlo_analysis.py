@@ -1,0 +1,287 @@
+"""Loop-aware cost model over compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every instruction ONCE — scan
+(while) bodies are not multiplied by trip count, which under-reports a
+60-layer scan by 60x. This walker parses the HLO module text, recovers the
+computation graph and per-name result types, reads while-loop trip counts
+from ``backend_config={"known_trip_count":...}`` (fallback: the largest
+int constant in the loop condition), and accumulates:
+
+  flops             dot/convolution FLOPs (the dominant terms), x trips
+  bytes             operand+output bytes of top-level instructions (fusion
+                    internals excluded — they stay in VMEM/registers), x trips
+  collective_bytes  operand bytes of all-reduce / all-gather /
+                    reduce-scatter / all-to-all / collective-permute
+                    (+ -start forms), x trips — per device, since the
+                    module is the per-device SPMD partition
+
+Heuristics (documented in EXPERIMENTS.md §Roofline):
+  * `conditional` contributes its most expensive branch;
+  * elementwise flops ignored (dot/conv dominate ML steps);
+  * bytes is an upper bound on HBM traffic (no inter-op reuse modelling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "reduce-scatter-start", "ragged-all-to-all",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.by_collective.items():
+            self.by_collective[k] = self.by_collective.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k, self.collective_bytes * k,
+            {n: v * k for n, v in self.by_collective.items()},
+        )
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str             # text after the opening paren
+    operand_names: List[str]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instruction]] = {}
+        self.types: Dict[str, str] = {}   # instruction name -> result type
+        self._parse(text)
+        self._cost_cache: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            if s.endswith("{") and ("(" in s) and ("=" not in s.split("(")[0]):
+                header = s.split("(")[0].strip()
+                cur = header.replace("ENTRY", "").strip().lstrip("%")
+                self.computations[cur] = []
+                if "ENTRY" in s:
+                    self.entry = cur
+                continue
+            if s.startswith("}"):
+                continue
+            m = _INSTR_RE.match(line)
+            if m and cur is not None:
+                name, out_type, opcode, rest = m.groups()
+                # operand names: within the call parens (up to un-nested ')')
+                depth, end = 1, len(rest)
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                operands = _OPERAND_NAME_RE.findall(rest[:end])
+                ins = Instruction(name, out_type, opcode, rest, operands)
+                self.computations[cur].append(ins)
+                self.types[name] = out_type
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, ins: Instruction) -> int:
+        inline = sum(_shape_bytes(s.group(0))
+                     for s in _SHAPE_RE.finditer(ins.rest.split("),")[0]))
+        if inline:
+            return inline
+        return sum(_shape_bytes(self.types.get(n, "")) for n in ins.operand_names)
+
+    def _operand_type(self, ins: Instruction, idx: int) -> str:
+        if idx < len(ins.operand_names):
+            t = self.types.get(ins.operand_names[idx], "")
+            if t:
+                return t
+        shapes = list(_SHAPE_RE.finditer(ins.rest))
+        if idx < len(shapes):
+            return shapes[idx].group(0)
+        return ""
+
+    def trip_count(self, ins: Instruction) -> int:
+        mm = _TRIP_RE.search(ins.rest)
+        if mm:
+            return int(mm.group(1))
+        mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+        best = 1
+        if mc:
+            for sub in self.computations.get(mc.group(1), []):
+                if sub.opcode == "constant" and sub.out_type in ("s32[]", "u32[]"):
+                    c = re.search(r"constant\((\d+)\)", sub.rest)
+                    if c:
+                        best = max(best, int(c.group(1)))
+        return best
+
+    def _dot_flops(self, ins: Instruction) -> float:
+        out_elems = _shape_elems(ins.out_type)
+        lhs_t = self._operand_type(ins, 0)
+        mdims = _SHAPE_RE.search(lhs_t)
+        if not mdims:
+            return 0.0
+        lhs_dims = [int(d) for d in mdims.group(2).split(",") if d]
+        mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+        contract = 1
+        if mm:
+            for idx in mm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, ins: Instruction) -> float:
+        out_elems = _shape_elems(ins.out_type)
+        k_t = self._operand_type(ins, 1)
+        mdims = _SHAPE_RE.search(k_t)
+        if not mdims:
+            return 0.0
+        k_dims = [int(d) for d in mdims.group(2).split(",") if d]
+        if not k_dims:
+            return 0.0
+        cout = max(k_dims)
+        kprod = 1
+        for d in k_dims:
+            kprod *= d
+        return 2.0 * out_elems * kprod / max(cout, 1)
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._cost_cache:
+            return self._cost_cache[comp_name]
+        total = Cost()
+        self._cost_cache[comp_name] = total   # cycle guard
+        for ins in self.computations.get(comp_name, []):
+            op = ins.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                trips = self.trip_count(ins)
+                if mb:
+                    total += self.cost_of(mb.group(1)).scaled(trips)
+                continue
+            if op == "conditional":
+                names = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%?([\w.\-]+))", ins.rest)
+                flat: List[str] = []
+                for a, b in names:
+                    if a:
+                        flat += [x.strip().lstrip("%") for x in a.split(",")]
+                    if b:
+                        flat.append(b)
+                if flat:
+                    costs = [self.cost_of(n) for n in flat]
+                    total += max(costs, key=lambda c: c.flops + c.bytes)
+                continue
+            if op == "fusion":
+                mcalls = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if mcalls:
+                    sub = self.cost_of(mcalls.group(1))
+                    total.flops += sub.flops
+                    total.collective_bytes += sub.collective_bytes
+                    for k, v in sub.by_collective.items():
+                        total.by_collective[k] = total.by_collective.get(k, 0) + v
+                total.bytes += _shape_bytes(ins.out_type) + self._operand_bytes(ins)
+                continue
+            if op in ("call", "custom-call") or op.startswith("async"):
+                mt = re.search(r"(?:to_apply|calls|called_computations=\{)[=]?%?([\w.\-]+)",
+                               ins.rest)
+                if mt and mt.group(1) in self.computations:
+                    total += self.cost_of(mt.group(1))
+                total.bytes += _shape_bytes(ins.out_type)
+                continue
+            if op in _COLLECTIVES:
+                nbytes = self._operand_bytes(ins)
+                base = op.replace("-start", "")
+                total.collective_bytes += nbytes
+                total.by_collective[base] = total.by_collective.get(base, 0) + nbytes
+                total.bytes += nbytes + _shape_bytes(ins.out_type)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(ins)
+            elif op == "convolution":
+                total.flops += self._conv_flops(ins)
+            if op in _SKIP_BYTES:
+                continue
+            total.bytes += _shape_bytes(ins.out_type) + self._operand_bytes(ins)
+        self._cost_cache[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        name = getattr(self, "entry", None)
+        if name is None:
+            for n in self.computations:
+                if n.startswith("main"):
+                    name = n
+            if name is None:
+                name = list(self.computations)[-1]
+        return self.cost_of(name)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

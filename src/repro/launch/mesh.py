@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+pure data parallelism over the inter-pod DCN, i.e. exactly the lossy
+PS-over-WAN link the paper's LTP targets (DESIGN.md §2).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (device count is locked at first jax init —
+the dry-run sets XLA_FLAGS before importing anything else).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many host devices exist (tests/examples)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link

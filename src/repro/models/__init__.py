@@ -1,0 +1,8 @@
+"""Model substrate: pure-JAX (pytree-params) definitions of every assigned
+architecture plus the paper's own CNN workload.
+
+Public API (see ``api.py``):
+    build(cfg)         -> ModelApi with init / loss_fn / prefill / decode_step
+    input_specs(...)   -> ShapeDtypeStruct stand-ins for the dry-run
+"""
+from repro.models.api import ModelApi, build  # noqa: F401

@@ -1,0 +1,173 @@
+"""Unified model API over all families + dry-run input specs.
+
+``build(cfg)`` returns a ModelApi with the same callable surface for every
+architecture; ``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, zero allocation) for each step kind:
+
+  train   -> loss_fn(params, batch)
+  prefill -> prefill(params, inputs)          (last-token logits + cache)
+  decode  -> decode_step(params, cache, token, pos)   (ONE token)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import cnn, encdec, transformer
+from repro.models.sharding import ShardCtx, NULL_CTX
+from repro.shapes import InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable        # (params, batch, *, ctx, remat) -> scalar
+    forward: Optional[Callable]
+    prefill: Optional[Callable]      # (params, inputs, *, ctx) -> (logits, cache)
+    decode_step: Optional[Callable]  # (params, cache, token, pos, *, ctx)
+    init_cache: Optional[Callable]   # (batch, max_seq, dtype) -> cache pytree
+
+
+def _tf_prefill(cfg):
+    def prefill(params, inputs, *, ctx=NULL_CTX):
+        logits, _, caches = transformer.forward(
+            cfg, params, inputs, ctx=ctx, collect_cache=True, remat=False,
+            last_only=True,
+        )
+        return logits[:, 0], caches
+
+    return prefill
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "cnn":
+        return ModelApi(
+            cfg=cfg,
+            init=functools.partial(cnn.init, cfg=cfg),
+            loss_fn=functools.partial(cnn.loss_fn, cfg),
+            forward=functools.partial(cnn.forward, cfg),
+            prefill=None,
+            decode_step=None,
+            init_cache=None,
+        )
+    if cfg.family == "audio":
+        return ModelApi(
+            cfg=cfg,
+            init=functools.partial(encdec.init, cfg=cfg),
+            loss_fn=functools.partial(encdec.loss_fn, cfg),
+            forward=None,
+            prefill=functools.partial(encdec.prefill, cfg),
+            decode_step=functools.partial(encdec.decode_step, cfg),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=functools.partial(transformer.init, cfg=cfg),
+        loss_fn=functools.partial(transformer.loss_fn, cfg),
+        forward=functools.partial(transformer.forward, cfg),
+        prefill=_tf_prefill(cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Shape support (DESIGN.md §long_500k / decode skips)
+# ----------------------------------------------------------------------------
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if cfg.family == "cnn":
+        if shape.kind == "train":
+            return True, ""
+        return False, "papernet is the paper's train-only CIFAR workload"
+    if shape.name == "long_500k":
+        has_ssm = any(c in ("M", "M2") for c in cfg.pattern_layers)
+        if has_ssm or cfg.window > 0:
+            return True, ""
+        return (
+            False,
+            "pure full-attention arch: 524k decode requires sub-quadratic "
+            "attention (DESIGN.md §long_500k skips)",
+        )
+    return True, ""
+
+
+# ----------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ----------------------------------------------------------------------------
+
+
+def _token_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(n_stub_positions, n_text_tokens) summing to seq_len."""
+    if cfg.family == "vlm":
+        p = min(cfg.vision_patches, seq_len // 2)
+        return p, seq_len - p
+    return 0, seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step selected by ``shape.kind``."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if cfg.family == "cnn":
+        return {
+            "images": SDS((b, 32, 32, 3), jnp.float32),
+            "labels": SDS((b,), jnp.int32),
+        }
+
+    if shape.kind == "decode":
+        api = build(cfg)
+        cache = jax.eval_shape(
+            lambda: api.init_cache(b, s, dt)
+        )
+        return {
+            "cache": cache,
+            "token": SDS((b,), jnp.int32),
+            "pos": SDS((), jnp.int32),
+        }
+
+    if cfg.family == "audio":
+        specs = {
+            "frames": SDS((b, cfg.encoder_frames, cfg.d_model), dt),
+            "tokens": SDS((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = SDS((b, s), jnp.int32)
+        return specs
+
+    n_patch, n_text = _token_split(cfg, s)
+    specs: Dict[str, Any] = {"tokens": SDS((b, n_text), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = SDS((b, n_patch, cfg.d_model), dt)
+        specs["positions3"] = SDS((3, b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    return specs
+
+
+def demo_inputs(cfg: ModelConfig, shape: InputShape, key) -> Dict[str, Any]:
+    """Concrete random inputs matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    counter = iter(range(10_000))
+
+    def materialize(path, sds):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        k = jax.random.fold_in(key, next(counter))
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            hi = cfg.vocab if "token" in str(name) or "label" in str(name) else max(
+                2, shape.seq_len
+            )
+            return jax.random.randint(k, sds.shape, 0, hi, sds.dtype)
+        return jax.random.normal(k, sds.shape).astype(sds.dtype) * 0.02
+
+    return jax.tree_util.tree_map_with_path(materialize, specs)

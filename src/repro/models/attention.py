@@ -1,0 +1,307 @@
+"""Attention: GQA with chunked (memory-bounded) softmax, sliding window,
+QK-norm, RoPE/M-RoPE, cross-attention, and single-token decode against a
+KV cache.
+
+Memory strategy (DESIGN.md): scores are never materialized for the full
+(Sq, Sk) plane — a ``lax.scan`` over query chunks bounds the live scores
+buffer to (B, H, cq, Sk_band). Sliding-window layers slice a static-length
+KV band per query chunk, so window attention is O(S*w), not O(S^2).
+All trip counts are static (the roofline HLO walker multiplies loop bodies
+by trip count).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    split_keys,
+)
+from repro.models.sharding import ShardCtx, NULL_CTX
+
+NEG_INF = -1e30
+
+
+def pick_chunk(s: int, target: int = 128) -> int:
+    """Largest divisor of ``s`` that is <= target (static)."""
+    if s <= target:
+        return s
+    for c in range(target, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def attn_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm_scale"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _constrain_heads(ctx: ShardCtx, x):
+    """(B, S, H, hd): prefer head sharding; fall back to seq sharding."""
+    b, s, h, hd = x.shape
+    if ctx.mesh is None:
+        return x
+    if h % max(ctx.nm, 1) == 0:
+        return ctx.constrain(x, ctx.dp or None, None, "model", None)
+    if s % max(ctx.nm, 1) == 0:
+        return ctx.constrain(x, ctx.dp or None, "model", None, None)
+    return ctx.constrain(x, ctx.dp or None, None, None, None)
+
+
+def _sdpa(q, k, v, mask, scale: float):
+    """q: (B, cq, H, hd); k/v: (B, Sk, KV, hd); mask: (B?, cq, Sk) bool or None.
+
+    GQA via reshape to (B, cq, KV, G, hd). Softmax in f32.
+    """
+    b, cq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, cq, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # guard fully-masked rows
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = (p / jnp.maximum(denom, 1e-30)).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, cq, h, hd)
+
+
+def multi_head_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_len: Optional[jnp.ndarray] = None,
+    chunk_q: int = 128,
+    ctx: ShardCtx = NULL_CTX,
+):
+    """Chunked attention. q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).
+
+    ``q_offset``: absolute position of q[0] (k positions start at 0).
+    ``window`` > 0: sliding-window causal attention over a static KV band.
+    ``kv_len``: optional per-batch valid KV length (for padded caches).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = pick_chunk(sq, chunk_q)
+    n_chunks = sq // cq
+
+    q = _constrain_heads(ctx, q)
+
+    use_band = causal and window > 0 and sk > window + cq
+    band = window + cq if use_band else sk
+
+    def chunk_body(carry, iq):
+        qs = iq * cq
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, cq, axis=1)
+        qpos = q_offset + qs + jnp.arange(cq)
+        if use_band:
+            # static-length KV band ending at the chunk's last position
+            start = jnp.clip(qs + q_offset + cq - band, 0, sk - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)
+        else:
+            kc, vc = k, v
+            kpos = jnp.arange(band)
+        mask = jnp.ones((b, cq, band), bool)
+        if causal:
+            mask &= (kpos[None, :] <= qpos[:, None])[None]
+        if window > 0:
+            mask &= (kpos[None, :] > qpos[:, None] - window)[None]
+        if kv_len is not None:
+            mask &= kpos[None, None, :] < kv_len[:, None, None]
+        out = _sdpa(qc, kc, vc, mask, scale)
+        return carry, out
+
+    if n_chunks == 1:
+        _, out = chunk_body(None, 0)
+        return out
+    _, outs = jax.lax.scan(chunk_body, None, jnp.arange(n_chunks))
+    # (n_chunks, B, cq, H, hd) -> (B, Sq, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def decode_attention(q1, cache_k, cache_v, pos, *, window: int = 0):
+    """One-token attention. q1: (B, 1, H, hd); cache_* : (B, Smax, KV, hd);
+    ``pos``: scalar index of the new token (cache holds [0, pos]).
+
+    For windowed layers the cache is a ring buffer of size ``window``
+    (all slots valid once pos >= window; positions implicit — softmax is
+    permutation-invariant so ring order is fine).
+    """
+    b, smax, kvh, hd = cache_k.shape
+    scale = 1.0 / math.sqrt(hd)
+    h = q1.shape[2]
+    g = h // kvh
+    qg = q1.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k).astype(jnp.float32) * scale
+    kpos = jnp.arange(smax)
+    if window > 0 and smax == window:
+        valid = kpos <= pos  # ring: all valid after warmup
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = (p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)).astype(
+        cache_v.dtype
+    )
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, cache_v)
+    return out.reshape(b, 1, h, hd)
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm_scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def _apply_pos(cfg: ModelConfig, q, k, positions):
+    if cfg.pos_type == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos_type == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x,
+    positions,
+    *,
+    window: jnp.ndarray | int = 0,
+    causal: bool = True,
+    ctx: ShardCtx = NULL_CTX,
+):
+    """Full-sequence self attention (train / prefill).
+
+    ``window`` may be a traced per-layer scalar (scan over heterogeneous
+    layer patterns); a static band optimization is applied only when it is
+    a Python int.
+    """
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _apply_pos(cfg, q, k, positions)
+    if isinstance(window, (int,)):
+        out = multi_head_attention(
+            q, k, v, causal=causal, window=window, ctx=ctx
+        )
+    else:
+        # traced window: compute full attention, mask by the dynamic window
+        out = _traced_window_attention(q, k, v, window, ctx=ctx)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def _traced_window_attention(q, k, v, window, *, ctx: ShardCtx):
+    """Causal attention where ``window`` is a traced scalar (0 = unlimited).
+
+    Used by scans over layer stacks whose pattern mixes 'W' and 'A' layers
+    (gemma3). Cost is O(S^2) for the W layers too — acceptable at train/
+    prefill sizes; the banded path handles the static-window archs.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = pick_chunk(sq, 128)
+    n_chunks = sq // cq
+    q = _constrain_heads(ctx, q)
+
+    def chunk_body(carry, iq):
+        qs = iq * cq
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, cq, axis=1)
+        qpos = qs + jnp.arange(cq)
+        kpos = jnp.arange(sk)
+        mask = (kpos[None, :] <= qpos[:, None])[None]
+        wmask = jnp.where(
+            window > 0, kpos[None, :] > qpos[:, None] - window, True
+        )[None]
+        out = _sdpa(qc, k, v, mask & wmask, scale)
+        return carry, out
+
+    if n_chunks == 1:
+        _, out = chunk_body(None, 0)
+        return out
+    _, outs = jax.lax.scan(chunk_body, None, jnp.arange(n_chunks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def self_attention_decode(cfg, p, x1, cache_k, cache_v, pos, *, window: int = 0):
+    """One-token self attention with functional cache update.
+
+    Returns (out, new_k, new_v). Cache layout: (B, Smax, KV, hd); for
+    windowed layers Smax == window and the write index wraps (ring buffer).
+    """
+    q, k, v = _project_qkv(cfg, p, x1)  # (B,1,...)
+    positions = jnp.full((x1.shape[0], 1), pos, jnp.int32)
+    if cfg.pos_type == "mrope":
+        pos3 = jnp.broadcast_to(pos, (3, x1.shape[0], 1)).astype(jnp.int32)
+        q, k = _apply_pos(cfg, q, k, pos3)
+    else:
+        q, k = _apply_pos(cfg, q, k, positions)
+    smax = cache_k.shape[1]
+    widx = jnp.mod(pos, smax) if window > 0 and smax == window else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), widx, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), widx, axis=1)
+    out = decode_attention(q, new_k, new_v, pos, window=window)
+    b = x1.shape[0]
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, new_k, new_v
+
+
+def cross_attention(cfg: ModelConfig, p: Params, x, enc_kv):
+    """Encoder-decoder cross attention (whisper). enc_kv: precomputed
+    (k, v) from encoder output, each (B, Senc, KV, hd)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = multi_head_attention(q, k, v, causal=False, window=0)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def cross_attn_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }

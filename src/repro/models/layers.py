@@ -1,0 +1,187 @@
+"""Shared building blocks: inits, norms, MLPs, rotary embeddings."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------------------
+# Init helpers
+# ----------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, offset, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + offset.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm_type == "rms":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "offset": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if cfg.norm_type == "rms":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["offset"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg: ModelConfig, d: int, ff: int, dtype) -> Params:
+    ks = split_keys(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dtype),
+            "w_up": dense_init(ks[1], d, ff, dtype),
+            "w_down": dense_init(ks[2], ff, d, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, ff, dtype),
+        "w_down": dense_init(ks[1], ff, d, dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x):
+    if cfg.mlp_type == "swiglu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings (plain + M-RoPE)
+# ----------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, ...]):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, ..., S) — temporal / height / width position ids.
+    sections: per-axis sizes of the half-dim split (sum == hd//2).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    # section id per frequency slot
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=hd // 2
+    )
+    # pick positions per slot: (..., S, hd/2)
+    pos = positions3.astype(jnp.float32)  # (3, ..., S)
+    pos_slot = jnp.take(pos, sec_id, axis=0)  # (hd/2, ..., S) after take on axis0?
+    # jnp.take over axis 0 keeps taken axis first -> move it last
+    pos_slot = jnp.moveaxis(pos_slot, 0, -1)  # (..., S, hd/2)
+    ang = pos_slot * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------------
+
+
+def embed_params(key, cfg: ModelConfig, dtype) -> Params:
+    ks = split_keys(key, 2)
+    p = {"embed": dense_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_padded, dtype)
+    return p
+
+
+def embed_tokens(p: Params, tokens):
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def unembed(p: Params, x, ctx=None):
+    if "lm_head" in p:
+        return x @ p["lm_head"]
+    e = p["embed"]
+    if ctx is not None:
+        # tied embeddings: the lookup wants vocab-replicated rows, the
+        # unembed matmul wants vocab-sharded columns — reshard the (small)
+        # table here instead of partial-summing the (huge) logits
+        e = ctx.constrain(e, "model", None)
+    return x @ e.T
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean next-token CE in float32; labels < 0 are masked out.
+
+    ``vocab`` is the true (unpadded) vocab — padded logit columns are masked.
+    """
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab:
+        neg = jnp.full((logits.shape[-1] - vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., vocab:].set(neg) if False else jnp.concatenate(
+            [logits[..., :vocab], jnp.broadcast_to(neg, logits.shape[:-1] + neg.shape)],
+            axis=-1,
+        )
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    lab = jnp.clip(labels, 0)
+    # gather-free pick: iota-compare + masked sum. Works with a
+    # vocab-sharded logits tensor (a take_along_axis over the sharded dim
+    # would force the SPMD partitioner into cross-shard index handling,
+    # which XLA:CPU cannot lower inside manual shard_map regions).
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(iota == lab[..., None], logits, 0.0), axis=-1
+    )
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill decompress K/V from the latent; decode uses the *absorbed*
+formulation: the query is projected into the kv_lora latent space so the
+KV cache holds only (c_kv: kv_lora) + (k_rope: qk_rope_dim) per token —
+the whole point of MLA (576 B/token/layer for the assigned config vs
+32 KiB for vanilla MHA-128).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.attention import multi_head_attention, NEG_INF
+from repro.models.layers import Params, apply_rope, dense_init, rms_norm, split_keys
+from repro.models.sharding import ShardCtx, NULL_CTX
+
+
+def mla_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = split_keys(key, 6)
+    p = {
+        "w_dkv": dense_init(ks[0], d, cfg.kv_lora + cfg.qk_rope_dim, dtype),
+        "w_uk": dense_init(ks[1], cfg.kv_lora, h * cfg.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[2], cfg.kv_lora, h * cfg.v_head_dim, dtype),
+        "wo": dense_init(ks[3], h * cfg.v_head_dim, d, dtype),
+        "kv_norm_scale": jnp.zeros((cfg.kv_lora,), jnp.float32),
+    }
+    if cfg.q_lora > 0:
+        p["w_dq"] = dense_init(ks[4], d, cfg.q_lora, dtype)
+        p["w_uq"] = dense_init(ks[5], cfg.q_lora, h * qk, dtype)
+        p["q_norm_scale"] = jnp.zeros((cfg.q_lora,), jnp.float32)
+    else:
+        p["wq"] = dense_init(ks[4], d, h * qk, dtype)
+    return p
+
+
+def _queries(cfg: ModelConfig, p: Params, x):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora > 0:
+        cq = x @ p["w_dq"]
+        q = rms_norm(cq, p["q_norm_scale"], cfg.norm_eps) @ p["w_uq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, qk)
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+
+
+def _latents(cfg: ModelConfig, p: Params, x, positions):
+    """Returns (c_kv normed, k_rope with rope applied)."""
+    ckv_full = x @ p["w_dkv"]
+    c_kv = rms_norm(ckv_full[..., : cfg.kv_lora], p["kv_norm_scale"], cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora :][:, :, None, :]  # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(
+    cfg: ModelConfig, p: Params, x, positions, *, ctx: ShardCtx = NULL_CTX
+):
+    """Full-sequence MLA (train/prefill). Decompresses K/V per layer."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _queries(cfg, p, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latents(cfg, p, x, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], axis=-1
+    )
+    # pad v to q/k head_dim so the shared chunked kernel applies, then crop
+    pad = q.shape[-1] - cfg.v_head_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    out = multi_head_attention(q, k, vp, causal=True, ctx=ctx)[..., : cfg.v_head_dim]
+    return out.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+
+
+def mla_decode(
+    cfg: ModelConfig, p: Params, x1, cache_ckv, cache_krope, pos
+):
+    """Absorbed one-token MLA decode.
+
+    cache_ckv: (B, Smax, kv_lora); cache_krope: (B, Smax, qk_rope_dim).
+    Returns (out, new_ckv, new_krope).
+    """
+    b = x1.shape[0]
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    q_nope, q_rope = _queries(cfg, p, x1)  # (B,1,h,*)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv1, k_rope1 = _latents(cfg, p, x1, positions)
+
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv1.astype(cache_ckv.dtype), pos, axis=1
+    )
+    new_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope1[:, :, 0, :].astype(cache_krope.dtype), pos, axis=1
+    )
+
+    # absorb W_uk into the query: q_abs (B,1,h,kv_lora)
+    w_uk = p["w_uk"].reshape(cfg.kv_lora, h, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_abs, new_ckv)
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, new_krope[:, :, :])
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(cache_ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    pr = jnp.exp(scores - m)
+    pr = (pr / jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-30)).astype(
+        new_ckv.dtype
+    )
+    out_lat = jnp.einsum("bhqs,bsl->bqhl", pr, new_ckv)  # (B,1,h,kv_lora)
+    w_uv = p["w_uv"].reshape(cfg.kv_lora, h, cfg.v_head_dim)
+    out = jnp.einsum("bqhl,lhv->bqhv", out_lat, w_uv)
+    out = out.reshape(b, 1, h * cfg.v_head_dim) @ p["wo"]
+    return out, new_ckv, new_krope

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Dispatch is scatter/gather (static shapes, token dropping at capacity),
+NOT one-hot einsum — the GShard-style dispatch einsum costs
+O(T * E * C * d) MXU FLOPs, which for the deepseek config (E=160) would
+dwarf the expert matmuls themselves and wreck the roofline's
+MODEL_FLOPS / HLO_FLOPS ratio. Expert FLOPs here are ~6 * N_active * D.
+
+Sharding: the (E, C, d) dispatch buffer is constrained expert-parallel
+('model') when E divides the axis (deepseek 160/16); for few-big-expert
+configs (mixtral E=8) experts are tensor-parallel inside (d_ff sharded)
+and the buffer stays expert-replicated. The baseline relies on GSPMD to
+lower the data-dependent gather/scatter; replacing it with an explicit
+shard_map all-to-all is a §Perf hillclimb.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Params, dense_init, split_keys
+from repro.models.sharding import ShardCtx, NULL_CTX
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def moe_ff(cfg: ModelConfig) -> int:
+    return cfg.moe_d_ff or cfg.d_ff
+
+
+def capacity(cfg: ModelConfig, n_tokens: int, factor: float = 1.25) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * factor)
+    return max(8, _round_up(c, 8))
+
+
+def moe_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, e, ff = cfg.d_model, cfg.n_experts, moe_ff(cfg)
+    ks = split_keys(key, 5)
+    p = {
+        "moe_gate": dense_init(ks[0], d, e, jnp.float32),
+        "experts_gate": (jax.random.normal(ks[1], (e, d, ff)) * 0.02).astype(dtype),
+        "experts_up": (jax.random.normal(ks[2], (e, d, ff)) * 0.02).astype(dtype),
+        "experts_down": (jax.random.normal(ks[3], (e, ff, d)) * 0.02).astype(dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        sff = cfg.n_shared_experts * ff
+        k1, k2, k3 = split_keys(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, sff, dtype),
+            "w_up": dense_init(k2, d, sff, dtype),
+            "w_down": dense_init(k3, sff, d, dtype),
+        }
+    return p
+
+
+def router(cfg: ModelConfig, p: Params, xf):
+    """xf: (T, d) -> (weights (T,k), ids (T,k), aux_loss scalar)."""
+    logits = (xf.astype(jnp.float32) @ p["moe_gate"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    e = cfg.n_experts
+    density = jnp.mean(
+        jax.nn.one_hot(ids[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e
+    return weights, ids, aux
+
+
+def _route_group(cfg: ModelConfig, p: Params, xf, cap: int):
+    """Routing + dispatch scatter for ONE group (vmapped over groups).
+
+    Returns (buf (e, cap, d), s_ids, pos_c, s_tok, s_w, aux)."""
+    tg, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    weights, ids, aux = router(cfg, p, xf)
+    a = tg * k
+    flat_ids = ids.reshape(a)
+    flat_w = weights.reshape(a)
+    tok_idx = jnp.arange(a) // k
+
+    order = jnp.argsort(flat_ids)  # stable
+    s_ids = flat_ids[order]
+    s_tok = tok_idx[order]
+    s_w = flat_w[order]
+
+    counts = jnp.bincount(flat_ids, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(a) - starts[s_ids]
+    pos_c = jnp.where(pos < cap, pos, cap)  # cap -> OOB -> dropped
+
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[s_ids, pos_c].set(xf[s_tok], mode="drop")
+    return buf, s_ids, pos_c, s_tok, s_w, aux
+
+
+def _combine_group(out_buf, s_ids, pos_c, s_tok, s_w, tg: int):
+    """Combine gather + weighted scatter-add for ONE group."""
+    d = out_buf.shape[-1]
+    y_assign = out_buf.at[s_ids, pos_c].get(mode="fill", fill_value=0)
+    y = jnp.zeros((tg, d), jnp.float32)
+    y = y.at[s_tok].add(
+        (y_assign * s_w[:, None].astype(out_buf.dtype)).astype(jnp.float32))
+    return y
+
+
+def apply_moe(
+    cfg: ModelConfig,
+    p: Params,
+    x,
+    *,
+    capacity_factor: float = 1.25,
+    ctx: ShardCtx = NULL_CTX,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss).
+
+    GShard-style GROUPED dispatch: tokens are split into one group per
+    data-parallel shard and routed within the group (token dropping at
+    per-group capacity). The group axis is dp-sharded, so dispatch
+    scatter/combine gather are shard-local; only the expert einsums touch
+    the model axis. (The ungrouped global-sort variant made the
+    partitioner replicate expert compute / all-reduce capacity buffers —
+    measured in EXPERIMENTS.md §Perf.)
+    """
+    b, s, d = x.shape
+    e, ff = cfg.n_experts, moe_ff(cfg)
+    t = b * s
+    xf = x.reshape(t, d)
+
+    ndp = 1
+    if ctx.mesh is not None:
+        for ax in ctx.dp:
+            ndp *= ctx.mesh.shape[ax]
+    g_count = ndp if (ndp > 1 and t % ndp == 0) else 1
+    tg = t // g_count
+    cap = capacity(cfg, tg, capacity_factor)
+    dp = ctx.dp or None
+    ep = e % max(ctx.nm, 1) == 0
+
+    xg = ctx.constrain(xf.reshape(g_count, tg, d), dp, None, None)
+    buf, s_ids, pos_c, s_tok, s_w, aux = jax.vmap(
+        lambda xx: _route_group(cfg, p, xx, cap)
+    )(xg)
+    # expert einsums at top level with explicit shardings: the group axis
+    # stays on dp, experts on 'model' (expert-parallel) or d_ff on 'model'
+    # (few big experts)
+    espec = "model" if ep else None
+    fspec = None if ep else "model"
+    buf = ctx.constrain(buf, dp, espec, None, None)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["experts_gate"]))
+    h = g * jnp.einsum("gecd,edf->gecf", buf, p["experts_up"])
+    h = ctx.constrain(h, dp, espec, None, fspec)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["experts_down"])
+    out_buf = ctx.constrain(out_buf, dp, espec, None, None)
+    y = jax.vmap(lambda ob, si, pc, st, sw: _combine_group(ob, si, pc, st, sw, tg))(
+        out_buf, s_ids, pos_c, s_tok, s_w
+    )
+    y = ctx.constrain(y, dp, None, None)
+    y = y.reshape(t, d).astype(x.dtype)
+    aux = jnp.mean(aux)
+
+    if cfg.n_shared_experts > 0:
+        sp = p["shared"]
+        sg = jax.nn.silu(xf @ sp["w_gate"])
+        y = y + (sg * (xf @ sp["w_up"])) @ sp["w_down"]
+    y = ctx.constrain(y, dp, "model")
+    return y.reshape(b, s, d), aux

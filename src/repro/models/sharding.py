@@ -1,0 +1,213 @@
+"""Sharding rules for params and activations.
+
+Baseline scheme (DESIGN.md §4): 2D "fsdp + tensor" sharding.
+  - ``data`` axis: FSDP shard of weight matrices + batch parallelism.
+  - ``model`` axis: tensor parallelism (heads / d_ff / experts / vocab).
+  - ``pod`` axis (multi-pod only): pure data parallelism across pods; weights
+    are replicated across pods, so the only cross-pod traffic is the gradient
+    all-reduce — the exact "PS over WAN/DCN" link the paper's LTP targets.
+
+Rules are name-based: parameter pytree paths carry conventional leaf names
+(``wq``, ``w_up``, ``embed``, ...).  ``spec_for(path, shape)`` returns a
+PartitionSpec; dims that do not divide the mesh axis fall back to replication
+(checked by the caller via ``divisible``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The batch-parallel axes present in this mesh ((pod, data) or (data,))."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _fits(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+# Leaf-name -> (dim sharded over 'data', dim sharded over 'model').
+# None means "never shard that side"; -1 means "last dim".
+_RULES = {
+    # embeddings / unembedding
+    "embed": (1, 0),          # (vocab, d_model): vocab->model, d->data
+    "lm_head": (0, 1),        # (d_model, vocab): vocab->model
+    "pos_embed": (None, 1),   # (max_pos, d_model)
+    # attention projections
+    "wq": (0, 1),             # (d_model, H*hd)
+    "wk": (0, 1),
+    "wv": (0, 1),
+    "wo": (1, 0),             # (H*hd, d_model)
+    # MLA
+    "w_dq": (0, None),        # (d, q_lora)
+    "w_uq": (None, 1),        # (q_lora, H*qk_dim)
+    "w_dkv": (0, None),       # (d, kv_lora + rope)
+    "w_uk": (None, 1),        # (kv_lora, H*nope)
+    "w_uv": (None, 1),        # (kv_lora, H*v_dim)
+    # MLP
+    "w_gate": (0, 1),         # (d, ff)
+    "w_up": (0, 1),
+    "w_down": (1, 0),         # (ff, d)
+    # MoE (E, d, ff) / (E, ff, d): expert dim -> model when divisible,
+    # handled specially in spec_for.
+    "moe_gate": (0, None),    # router (d, E)
+    # SSM
+    "in_proj": (0, 1),        # (d, 2*d_inner) etc.
+    "out_proj": (1, 0),       # (d_inner, d)
+    "x_proj": (1, None),      # (d_inner, dt_rank + 2*state)
+    "dt_proj": (None, 1),     # (dt_rank, d_inner)
+    "conv_w": (1, None),      # (k, d_inner) tap-major
+    "A_log": (1, None),       # (d_inner, state) — model on d_inner
+    # CNN
+    "conv": (None, None),
+    "fc": (0, None),
+}
+
+_REPLICATED_SUFFIXES = (
+    "scale", "bias", "offset", "D", "dt_bias", "A_log_m2", "gamma",
+)
+
+
+def _leaf_name(path: Any) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+    return parts[-1] if parts else ""
+
+
+def spec_for(path: Any, shape: Tuple[int, ...], mesh: jax.sharding.Mesh,
+             *, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf, honoring divisibility.
+
+    ``fsdp=False`` drops the 'data' (FSDP) axis from weight specs — used
+    when weights must be replicated across the worker axes (LTP's
+    per-worker gradient masking on a single-pod mesh)."""
+    name = _leaf_name(path)
+    nd = axis_size(mesh, "data") if fsdp else 1
+    nm = axis_size(mesh, "model")
+    ndim = len(shape)
+
+    if name in _REPLICATED_SUFFIXES or ndim <= 1:
+        return P()
+
+    if not fsdp and name == "embed" and ndim == 2:
+        # inside manual (LTP) regions the token-lookup gather must be
+        # shard-local: shard d_model, replicate vocab rows
+        return P(None, "model") if _fits(shape[1], nm) else P()
+
+    # MoE expert stacks: (E, d_in, d_out)
+    if name in ("experts_gate", "experts_up", "experts_down") and ndim == 3:
+        e, di, do = shape
+        spec = [None, None, None]
+        if _fits(e, nm):
+            spec[0] = "model"
+            if _fits(di, nd):
+                spec[1] = "data"
+        else:  # few big experts (mixtral): tensor-parallel within experts
+            ff_dim = 2 if name != "experts_down" else 1
+            if _fits(shape[ff_dim], nm):
+                spec[ff_dim] = "model"
+            other = 1 if ff_dim == 2 else 2
+            if _fits(shape[other], nd):
+                spec[other] = "data"
+        return P(*spec)
+
+    rule = _RULES.get(name)
+    if rule is None:
+        # generic 2D matmul weight: fsdp on dim0, tensor on dim1 when divisible
+        rule = (0, 1) if ndim == 2 else (None, None)
+    d_dim, m_dim = rule
+    spec = [None] * ndim
+    if m_dim is not None and m_dim < ndim and _fits(shape[m_dim], nm):
+        spec[m_dim] = "model"
+    if (
+        d_dim is not None
+        and d_dim < ndim
+        and spec[d_dim] is None
+        and _fits(shape[d_dim], nd)
+    ):
+        spec[d_dim] = "data"
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Pytree of NamedShardings matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for(path, leaf.shape, mesh)),
+        params_shape,
+    )
+
+
+def param_specs(params_shape: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(path, leaf.shape, mesh), params_shape
+    )
+
+
+# ----------------------------------------------------------------------------
+# Activation constraints
+# ----------------------------------------------------------------------------
+
+
+class ShardCtx:
+    """Carries the mesh through model code; ``None`` mesh = no constraints
+    (single-device smoke tests).
+
+    ``exclude``: axis names that are MANUAL in an enclosing shard_map —
+    sharding constraints inside the region may not mention them."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 exclude: Tuple[str, ...] = ()):
+        self.mesh = mesh
+        self.exclude = tuple(exclude)
+        dp = dp_axes(mesh) if mesh is not None else ()
+        self.dp: Tuple[str, ...] = tuple(a for a in dp if a not in self.exclude)
+        self.nm = axis_size(mesh, "model") if mesh is not None else 1
+        if "model" in self.exclude:
+            self.nm = 1
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint, skipping axes that don't divide."""
+        if self.mesh is None:
+            return x
+        fixed = []
+        for dim, s in enumerate(spec):
+            if s is None:
+                fixed.append(None)
+                continue
+            names = (s,) if isinstance(s, str) else tuple(s)
+            total = 1
+            for n in names:
+                total *= axis_size(self.mesh, n)
+            if x.shape[dim] % total == 0 and total > 1:
+                fixed.append(s)
+            else:
+                fixed.append(None)
+        # bare-PartitionSpec constraint (resolved by the ambient set_mesh):
+        # NamedSharding would reject worker-varying values inside a
+        # partial-manual shard_map region (vma/auto axis-type clash)
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+    def batch_seq_hidden(self, x):
+        """(B, S, D) -> batch over dp, hidden over model."""
+        return self.constrain(x, self.dp or None, None, "model")
+
+    def batch_only(self, x):
+        spec = [self.dp or None] + [None] * (x.ndim - 1)
+        return self.constrain(x, *spec)
+
+
+NULL_CTX = ShardCtx(None)

@@ -1,0 +1,267 @@
+"""State-space mixers: Mamba-1 (selective scan) and Mamba-2 (chunked SSD).
+
+Mamba-1 (falcon-mamba): per-channel diagonal A (d_inner, state); the
+recurrence runs as a ``lax.scan`` over time with a (B, d_inner, state)
+carry — tiny state, static trip count.
+
+Mamba-2 (zamba2): scalar decay per head -> the SSD block-matmul form.
+Sequence is chunked; within-chunk terms are MXU-friendly matmuls, the
+chunk-to-chunk state is a scan carry. This is the TPU-native adaptation:
+quadratic-within-chunk work maps onto the MXU, state passing is O(S/Lc).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import Params, dense_init, rms_norm, split_keys
+from repro.models.sharding import ShardCtx, NULL_CTX
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def _causal_conv(x, conv_w, conv_b):
+    """x: (B, S, C); conv_w: (k, C) tap-major; causal depthwise conv."""
+    k = conv_w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * conv_w[i]
+    return out + conv_b
+
+
+def _conv_step(buf, x1, conv_w, conv_b):
+    """One-token causal conv. buf: (B, k-1, C) previous inputs; x1: (B, C).
+    Returns (y1, new_buf)."""
+    k = conv_w.shape[0]
+    window = jnp.concatenate([buf, x1[:, None, :]], axis=1)  # (B, k, C)
+    y1 = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+    return y1, window[:, 1:]
+
+
+# ============================================================================
+# Mamba-1
+# ============================================================================
+
+
+def mamba1_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    r = _dt_rank(cfg)
+    ks = split_keys(key, 5)
+    A = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype, scale=r**-0.5),
+        "dt_bias": jnp.full((di,), math.log(math.e**0.01 - 1.0), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba1_inputs(cfg: ModelConfig, p: Params, u):
+    """Shared projection path. u: (B, S, d). Returns x, z, dt, Bc, Cc."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    xdbl = x @ p["x_proj"]
+    dt = jax.nn.softplus(
+        (xdbl[..., :r] @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    Bc = xdbl[..., r : r + n].astype(jnp.float32)
+    Cc = xdbl[..., r + n :].astype(jnp.float32)
+    return x, z, dt, Bc, Cc
+
+
+def mamba1_forward(cfg: ModelConfig, p: Params, u, *, ctx: ShardCtx = NULL_CTX):
+    """Full-sequence selective scan. u: (B, S, d) -> (B, S, d)."""
+    b, s, _ = u.shape
+    x, z, dt, Bc, Cc = _mamba1_inputs(cfg, p, u)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    xf = x.astype(jnp.float32)
+
+    def step(h, ins):
+        xt, dtt, bt, ct = ins  # (B,di), (B,di), (B,n), (B,n)
+        da = jnp.exp(dtt[..., None] * A)  # (B,di,n)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    # tie h0's provenance to the input so its varying-manual-axes type
+    # matches the scan body output inside shard_map regions
+    h0 = jnp.zeros((b, cfg.d_inner, cfg.ssm_state), jnp.float32) \
+        + 0.0 * xf[0, 0, 0]
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["D"]
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba1_decode(cfg: ModelConfig, p: Params, u1, state):
+    """One-token update. u1: (B, 1, d); state = {"h": (B,di,n),
+    "conv": (B, k-1, di)}. Returns (out, new_state)."""
+    n, r = cfg.ssm_state, _dt_rank(cfg)
+    xz = u1[:, 0] @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_buf = _conv_step(state["conv"], x, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xdbl = xc @ p["x_proj"]
+    dt = jax.nn.softplus(
+        (xdbl[..., :r] @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    Bc = xdbl[..., r : r + n].astype(jnp.float32)
+    Cc = xdbl[..., r + n :].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * A)
+    h = da * state["h"] + (dt * xc.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc) + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(u1.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": conv_buf}
+
+
+def mamba1_state_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+# ============================================================================
+# Mamba-2 (SSD)
+# ============================================================================
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    ks = split_keys(key, 3)
+    conv_ch = di + 2 * n  # conv over (x, B, C)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log_m2": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gamma": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, proj):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xBC, dt
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, u, *, chunk: int = 128,
+                   ctx: ShardCtx = NULL_CTX):
+    """Chunked SSD. u: (B, S, d) -> (B, S, d)."""
+    b, s, _ = u.shape
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = di // nh  # head dim
+    lc = chunk
+    while s % lc != 0:
+        lc //= 2
+    nchunks = s // lc
+
+    proj = u @ p["in_proj"]
+    z, xBC, dt = _mamba2_split(cfg, proj)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :di].reshape(b, s, nh, hp)
+    Bc = xBC[..., di : di + n].astype(jnp.float32)
+    Cc = xBC[..., di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log_m2"])  # (nh,)
+    la = dt * A  # log decay per step (B,S,nh), <= 0
+
+    xr = x.reshape(b, nchunks, lc, nh, hp).astype(jnp.float32)
+    br = Bc.reshape(b, nchunks, lc, n)
+    cr = Cc.reshape(b, nchunks, lc, n)
+    lar = la.reshape(b, nchunks, lc, nh)
+    dtr = dt.reshape(b, nchunks, lc, nh)
+
+    def chunk_step(hstate, ins):
+        xc, bc, cc, lac, dtc = ins  # (B,lc,nh,hp),(B,lc,n),(B,lc,n),(B,lc,nh),(B,lc,nh)
+        cs = jnp.cumsum(lac, axis=1)  # (B,lc,nh)
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j (incl. own-step decay)
+        L = jnp.exp(
+            jnp.where(
+                (jnp.arange(lc)[:, None] >= jnp.arange(lc)[None, :])[None, :, :, None],
+                cs[:, :, None, :] - cs[:, None, :, :],
+                -jnp.inf,
+            )
+        )  # (B,lc,lc,nh)
+        sb = jnp.einsum("bin,bjn->bij", cc, bc)  # (B,lc,lc) shared across heads
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", sb, L, xc * dtc[..., None])
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cs)  # decay from chunk start to step i
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", cc, hstate, decay_in
+        )
+        # new state: h' = exp(sum la) h + sum_j exp(cs_end - cs_j) dt_j x_j B_j^T
+        tot = cs[:, -1:, :]  # (B,1,nh)
+        w = jnp.exp(tot - cs)  # (B,lc,nh) decay from step j to chunk end
+        h_new = jnp.exp(tot[:, 0, :])[:, :, None, None] * hstate + jnp.einsum(
+            "bjhp,bjn,bjh->bhpn", xc * dtc[..., None], bc, w
+        )
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32) + 0.0 * xr[0, 0, 0, 0, 0]
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xr, br, cr, lar, dtr))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hp)
+    y = y + xr.reshape(b, s, nh, hp) * p["D"][:, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma"] - 1.0, cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode(cfg: ModelConfig, p: Params, u1, state):
+    """One-token SSD update. state = {"h": (B,nh,hp,n), "conv": (B,k-1,conv_ch)}."""
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = di // nh
+    proj = u1[:, 0] @ p["in_proj"]
+    z, xBC, dt = _mamba2_split(cfg, proj)
+    xBC, conv_buf = _conv_step(state["conv"], xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :di].reshape(-1, nh, hp).astype(jnp.float32)
+    Bc = xBC[..., di : di + n].astype(jnp.float32)
+    Cc = xBC[..., di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    a = jnp.exp(dt * -jnp.exp(p["A_log_m2"]))  # (B,nh)
+    h = a[..., None, None] * state["h"] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x, Bc, dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc) + x * p["D"][:, None]
+    y = y.reshape(-1, di).astype(u1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma"] - 1.0, cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None, :], {"h": h, "conv": conv_buf}
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "h": jnp.zeros((batch, nh, di // nh, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    }

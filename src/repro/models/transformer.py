@@ -1,0 +1,474 @@
+"""Decoder-only transformer covering dense / MoE / SSM / hybrid / VLM
+families via a per-layer mixer code ('A', 'W', 'M', 'M2', 'L').
+
+Layer stacking: layers are grouped by *pattern period* and scanned —
+each position within the period has a static mixer code, so heterogeneous
+patterns (gemma3 5W:1A, zamba2 mamba+shared-attn) still lower as a single
+``lax.scan`` with static trip count (exact roofline accounting, small HLO).
+
+  params = {
+    embed, lead: (layer...), stack: {p0..p{P-1}: stacked over periods},
+    rem: (layer...), shared_attn?, final_norm
+  }
+
+Decode (`serve_step`) unrolls a Python loop over layers so every layer can
+carry its own cache shape (ring buffers for 'W' layers, latent caches for
+MLA, SSM states for mamba) — that is what makes long_500k feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    cross_entropy,
+    embed_params,
+    embed_tokens,
+    mlp_params,
+    norm_params,
+    split_keys,
+    unembed,
+)
+from repro.models.sharding import ShardCtx, NULL_CTX
+
+
+# ----------------------------------------------------------------------------
+# Layer plan
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    lead_codes: Tuple[str, ...]   # unstacked leading layers (deepseek dense-0)
+    period_codes: Tuple[str, ...] # codes within one scanned period
+    n_periods: int
+    rem_codes: Tuple[str, ...]    # unstacked trailing layers
+    shared_attn: bool             # zamba2: shared block at each period end
+
+    @property
+    def n_layers(self) -> int:
+        return (
+            len(self.lead_codes)
+            + self.n_periods * len(self.period_codes)
+            + len(self.rem_codes)
+        )
+
+
+def make_plan(cfg: ModelConfig) -> LayerPlan:
+    codes = cfg.pattern_layers
+    lead = cfg.first_dense_layers if cfg.n_experts > 0 else 0
+    rest = codes[lead:]
+    if cfg.shared_attn_every > 0:
+        period = cfg.shared_attn_every
+        shared = True
+    else:
+        period = len(cfg.block_pattern)
+        shared = False
+    n_full = len(rest) // period
+    rem = rest[n_full * period :]
+    return LayerPlan(
+        lead_codes=codes[:lead],
+        period_codes=rest[:period] if n_full > 0 else (),
+        n_periods=n_full,
+        rem_codes=rem if n_full > 0 else rest,
+        shared_attn=shared,
+    )
+
+
+def _layer_has_mlp(cfg: ModelConfig, code: str) -> bool:
+    if code in ("M", "M2"):
+        return False  # mamba block is the whole layer
+    return cfg.d_ff > 0 or cfg.n_experts > 0
+
+
+def _layer_is_moe(cfg: ModelConfig, code: str, is_lead: bool) -> bool:
+    return cfg.n_experts > 0 and not is_lead and _layer_has_mlp(cfg, code)
+
+
+def window_for(cfg: ModelConfig, code: str) -> int:
+    return cfg.window if code == "W" else 0
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+
+def _mixer_params(key, cfg: ModelConfig, code: str, dtype) -> Params:
+    if code in ("A", "W"):
+        return attn.attn_params(key, cfg, dtype)
+    if code == "L":
+        return mla_mod.mla_params(key, cfg, dtype)
+    if code == "M":
+        return ssm.mamba1_params(key, cfg, dtype)
+    if code == "M2":
+        return ssm.mamba2_params(key, cfg, dtype)
+    raise ValueError(f"unknown mixer code {code!r}")
+
+
+def _layer_params(key, cfg: ModelConfig, code: str, *, is_lead: bool, dtype) -> Params:
+    k_mix, k_mlp = jax.random.split(key)
+    p: Params = {
+        "norm1": norm_params(cfg, cfg.d_model),
+        "mixer": _mixer_params(k_mix, cfg, code, dtype),
+    }
+    if _layer_has_mlp(cfg, code):
+        p["norm2"] = norm_params(cfg, cfg.d_model)
+        if _layer_is_moe(cfg, code, is_lead):
+            p["moe"] = moe_mod.moe_params(k_mlp, cfg, dtype)
+        else:
+            p["mlp"] = mlp_params(k_mlp, cfg, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _shared_block_params(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": norm_params(cfg, cfg.d_model),
+        "attn": attn.attn_params(k1, cfg, dtype),
+        "norm2": norm_params(cfg, cfg.d_model),
+        "mlp": mlp_params(k2, cfg, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    plan = make_plan(cfg)
+    k_embed, k_lead, k_stack, k_rem, k_shared = split_keys(key, 5)
+    params: Params = {"embed": embed_params(k_embed, cfg, dtype)}
+
+    params["lead"] = tuple(
+        _layer_params(k, cfg, c, is_lead=True, dtype=dtype)
+        for k, c in zip(split_keys(k_lead, max(1, len(plan.lead_codes))), plan.lead_codes)
+    )
+    if plan.n_periods > 0:
+        stack: Dict[str, Any] = {}
+        pkeys = split_keys(k_stack, len(plan.period_codes))
+        for j, code in enumerate(plan.period_codes):
+            per = [
+                _layer_params(k, cfg, code, is_lead=False, dtype=dtype)
+                for k in split_keys(pkeys[j], plan.n_periods)
+            ]
+            stack[f"p{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        params["stack"] = stack
+    params["rem"] = tuple(
+        _layer_params(k, cfg, c, is_lead=False, dtype=dtype)
+        for k, c in zip(split_keys(k_rem, max(1, len(plan.rem_codes))), plan.rem_codes)
+    )
+    if plan.shared_attn:
+        params["shared_attn"] = _shared_block_params(k_shared, cfg, dtype)
+    params["final_norm"] = norm_params(cfg, cfg.d_model)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Forward (train / prefill)
+# ----------------------------------------------------------------------------
+
+
+def _apply_mixer(cfg, code, p, x, positions, *, ctx, collect_cache=False):
+    """Returns (out, cache_or_None)."""
+    w = window_for(cfg, code)
+    if code in ("A", "W"):
+        q, k, v = attn._project_qkv(cfg, p, x)
+        q, k = attn._apply_pos(cfg, q, k, positions)
+        out = attn.multi_head_attention(q, k, v, causal=True, window=w, ctx=ctx)
+        b, s = x.shape[:2]
+        out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+        cache = None
+        if collect_cache:
+            if w > 0 and s > w:
+                cache = {"k": k[:, s - w :], "v": v[:, s - w :]}
+            else:
+                cache = {"k": k, "v": v}
+        return out, cache
+    if code == "L":
+        out = mla_mod.mla_attention(cfg, p, x, positions, ctx=ctx)
+        cache = None
+        if collect_cache:
+            ckv, krope = mla_mod._latents(cfg, p, x, positions)
+            cache = {"ckv": ckv, "krope": krope[:, :, 0, :]}
+        return out, cache
+    if code == "M":
+        out = ssm.mamba1_forward(cfg, p, x, ctx=ctx)
+        # decode state from prefill: recompute path not needed for dry-run;
+        # examples use decode-from-scratch or train only.
+        return out, None
+    if code == "M2":
+        out = ssm.mamba2_forward(cfg, p, x, ctx=ctx)
+        return out, None
+    raise ValueError(code)
+
+
+def _apply_layer(cfg, code, p, x, positions, *, is_lead, ctx, collect_cache=False):
+    h = apply_norm(cfg, p["norm1"], x)
+    mix, cache = _apply_mixer(
+        cfg, code, p["mixer"], h, positions, ctx=ctx, collect_cache=collect_cache
+    )
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in p:
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+    elif "moe" in p:
+        y, aux = moe_mod.apply_moe(cfg, p["moe"], apply_norm(cfg, p["norm2"], x), ctx=ctx)
+        x = x + y
+    x = ctx.batch_seq_hidden(x)
+    return x, aux, cache
+
+
+def _apply_shared_block(cfg, p, x, positions, *, ctx, collect_cache=False):
+    h = apply_norm(cfg, p["norm1"], x)
+    out = attn.self_attention(cfg, p["attn"], h, positions, window=0, ctx=ctx)
+    cache = None
+    if collect_cache:
+        q, k, v = attn._project_qkv(cfg, p["attn"], h)
+        _, k = attn._apply_pos(cfg, q, k, positions)
+        cache = {"k": k, "v": v}
+    x = x + out
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+    return x, cache
+
+
+def _positions_for(cfg: ModelConfig, inputs: Dict[str, Any], s: int, b: int):
+    if cfg.pos_type == "mrope":
+        if "positions3" in inputs:
+            return inputs["positions3"]
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return jnp.broadcast_to(pos, (3, b, s))
+    return jnp.broadcast_to(jnp.arange(s), (b, s))
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, inputs: Dict[str, Any], ctx):
+    """Token (+ modality-stub) embedding. Returns (x, positions)."""
+    tok = inputs["tokens"]
+    x = embed_tokens(params["embed"], tok).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and "patch_embeds" in inputs:
+        x = jnp.concatenate(
+            [inputs["patch_embeds"].astype(x.dtype), x], axis=1
+        )
+    b, s = x.shape[:2]
+    positions = _positions_for(cfg, inputs, s, b)
+    x = ctx.batch_seq_hidden(x)
+    return x, positions
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    inputs: Dict[str, Any],
+    *,
+    ctx: ShardCtx = NULL_CTX,
+    collect_cache: bool = False,
+    remat: bool = True,
+    last_only: bool = False,
+):
+    """Full-sequence forward.
+
+    Returns (logits, aux_loss, caches) — caches is a dict with 'lead'/'stack'/
+    'rem'/'shared' entries when collect_cache else None.
+    """
+    plan = make_plan(cfg)
+    x, positions = embed_inputs(cfg, params, inputs, ctx)
+    # tie the aux-loss carry's provenance to x so its varying-manual-axes
+    # type matches the scan body's output inside shard_map regions
+    aux = jnp.float32(0) * x[0, 0, 0].astype(jnp.float32)
+    caches: Dict[str, Any] = {"lead": [], "rem": [], "stack": None, "shared": None}
+
+    for p, code in zip(params["lead"], plan.lead_codes):
+        x, a, c = _apply_layer(
+            cfg, code, p, x, positions, is_lead=True, ctx=ctx, collect_cache=collect_cache
+        )
+        aux += a
+        caches["lead"].append(c)
+
+    if plan.n_periods > 0:
+        shared_p = params.get("shared_attn")
+
+        def body(carry, stack_slice):
+            x, aux = carry
+            period_caches = {}
+            for j, code in enumerate(plan.period_codes):
+                x, a, c = _apply_layer(
+                    cfg, code, stack_slice[f"p{j}"], x, positions,
+                    is_lead=False, ctx=ctx, collect_cache=collect_cache,
+                )
+                aux += a
+                if collect_cache:
+                    period_caches[f"p{j}"] = c
+            if plan.shared_attn:
+                x, sc = _apply_shared_block(
+                    cfg, shared_p, x, positions, ctx=ctx, collect_cache=collect_cache
+                )
+                if collect_cache:
+                    period_caches["shared"] = sc
+            out = period_caches if collect_cache else None
+            return (x, aux), out
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), stack_caches = jax.lax.scan(body, (x, aux), params["stack"])
+        caches["stack"] = stack_caches
+    for p, code in zip(params["rem"], plan.rem_codes):
+        x, a, c = _apply_layer(
+            cfg, code, p, x, positions, is_lead=False, ctx=ctx, collect_cache=collect_cache
+        )
+        aux += a
+        caches["rem"].append(c)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:, :]
+    logits = unembed(params["embed"], x, ctx)
+    logits = ctx.constrain(logits, ctx.dp or None, None, "model")
+    return logits, aux, (caches if collect_cache else None)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            *, ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    logits, aux, _ = forward(cfg, params, batch, ctx=ctx, remat=remat)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab)
+    if cfg.n_experts > 0:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ----------------------------------------------------------------------------
+# Decode (serve_step)
+# ----------------------------------------------------------------------------
+
+
+def _mixer_cache_spec(cfg: ModelConfig, code: str, batch: int, max_seq: int, dtype):
+    w = window_for(cfg, code)
+    if code in ("A", "W"):
+        s = min(w, max_seq) if w > 0 else max_seq
+        shp = (batch, s, cfg.n_kv, cfg.hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if code == "L":
+        return {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+        }
+    if code == "M":
+        return ssm.mamba1_state_init(cfg, batch, dtype)
+    if code == "M2":
+        return ssm.mamba2_state_init(cfg, batch, dtype)
+    raise ValueError(code)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Cache pytree for decode: one entry per layer (+ shared-attn slots)."""
+    plan = make_plan(cfg)
+    layers: List[Any] = []
+    for code in plan.lead_codes:
+        layers.append(_mixer_cache_spec(cfg, code, batch, max_seq, dtype))
+    for _ in range(plan.n_periods):
+        for code in plan.period_codes:
+            layers.append(_mixer_cache_spec(cfg, code, batch, max_seq, dtype))
+    for code in plan.rem_codes:
+        layers.append(_mixer_cache_spec(cfg, code, batch, max_seq, dtype))
+    cache: Dict[str, Any] = {"layers": tuple(layers)}
+    if plan.shared_attn:
+        shp = (batch, max_seq, cfg.n_kv, cfg.hd)
+        cache["shared"] = tuple(
+            {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+            for _ in range(plan.n_periods)
+        )
+    return cache
+
+
+def _layer_param_at(params: Params, plan: LayerPlan, idx: int) -> Tuple[Params, str, bool]:
+    """Layer params + code for flat layer index (decode path)."""
+    nl = len(plan.lead_codes)
+    if idx < nl:
+        return params["lead"][idx], plan.lead_codes[idx], False
+    idx -= nl
+    per = len(plan.period_codes)
+    if idx < plan.n_periods * per:
+        i, j = divmod(idx, per)
+        p = jax.tree.map(lambda x: x[i], params["stack"][f"p{j}"])
+        is_period_end = j == per - 1
+        return p, plan.period_codes[j], is_period_end
+    idx -= plan.n_periods * per
+    return params["rem"][idx], plan.rem_codes[idx], False
+
+
+def _decode_mixer(cfg, code, p, x1, cache, pos):
+    w = window_for(cfg, code)
+    if code in ("A", "W"):
+        out, nk, nv = attn.self_attention_decode(
+            cfg, p, x1, cache["k"], cache["v"], pos,
+            window=w if (w > 0 and cache["k"].shape[1] == w) else 0,
+        )
+        return out, {"k": nk, "v": nv}
+    if code == "L":
+        out, nckv, nkrope = mla_mod.mla_decode(
+            cfg, p, x1, cache["ckv"], cache["krope"], pos
+        )
+        return out, {"ckv": nckv, "krope": nkrope}
+    if code == "M":
+        return ssm.mamba1_decode(cfg, p, x1, cache)
+    if code == "M2":
+        return ssm.mamba2_decode(cfg, p, x1, cache)
+    raise ValueError(code)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Dict[str, Any],
+    token,
+    pos,
+    *,
+    ctx: ShardCtx = NULL_CTX,
+):
+    """One decode step. token: (B,) int32; pos: scalar int32 position.
+
+    Returns (logits (B, vocab_padded), new_cache).
+    """
+    plan = make_plan(cfg)
+    x = embed_tokens(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
+    x = ctx.batch_only(x)
+    new_layers = []
+    new_shared = list(cache.get("shared", ()))
+    per = len(plan.period_codes)
+    n_lead = len(plan.lead_codes)
+    for idx in range(plan.n_layers):
+        p, code, period_end = _layer_param_at(params, plan, idx)
+        h = apply_norm(cfg, p["norm1"], x)
+        mix, nc = _decode_mixer(cfg, code, p["mixer"], h, cache["layers"][idx], pos)
+        new_layers.append(nc)
+        x = x + mix
+        if "mlp" in p:
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+        elif "moe" in p:
+            y, _ = moe_mod.apply_moe(cfg, p["moe"], apply_norm(cfg, p["norm2"], x), ctx=ctx)
+            x = x + y
+        if plan.shared_attn and period_end and idx >= n_lead:
+            app_i = (idx - n_lead) // per
+            if app_i < len(new_shared):
+                sp = params["shared_attn"]
+                h = apply_norm(cfg, sp["norm1"], x)
+                out, nk, nv = attn.self_attention_decode(
+                    cfg, sp["attn"], h,
+                    new_shared[app_i]["k"], new_shared[app_i]["v"], pos, window=0,
+                )
+                new_shared[app_i] = {"k": nk, "v": nv}
+                x = x + out
+                x = x + apply_mlp(cfg, sp["mlp"], apply_norm(cfg, sp["norm2"], x))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x, ctx)[:, 0]
+    new_cache = {"layers": tuple(new_layers)}
+    if plan.shared_attn:
+        new_cache["shared"] = tuple(new_shared)
+    return logits, new_cache

@@ -1,0 +1,13 @@
+"""Packet-level discrete-event transport simulator.
+
+Reproduces the paper's protocol-level experiments at packet granularity:
+Fig 3 (incast FCT long tail), Fig 4 (TCP under non-congestion loss),
+Fig 12/14 (training throughput / BST), Fig 15 (fairness).
+"""
+from repro.net.simcore import Sim, Pipe, Packet  # noqa: F401
+from repro.net.scenarios import (  # noqa: F401
+    incast_gather,
+    p2p_transfer,
+    fairness_share,
+    train_iterations,
+)

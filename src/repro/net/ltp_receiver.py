@@ -1,0 +1,171 @@
+"""LTP receiver(s): per-packet out-of-order ACK, Early Close, bubble
+accounting (paper §III-B/C).
+
+``LTPFlowReceiver`` handles one flow. ``PSGatherReceiver`` coordinates the
+incast gather at the PS: per-link LT thresholds, one shared deadline, and
+the close rule over the aggregate received percentage + critical-packet
+completeness. On close it broadcasts "stop" to all senders and records,
+per flow, exactly which packets must be bubble-filled.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.net.simcore import Packet, Sim
+
+
+class LTPFlowReceiver:
+    """Tracks one sender's flow; emits per-packet ACKs."""
+
+    def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
+        self.sim = sim
+        self.send_ack = send_ack
+        self.flow = flow
+        self.n: Optional[int] = None
+        self.critical: Optional[np.ndarray] = None
+        self.received: Set[int] = set()
+        self.t_start: Optional[float] = None
+        self.t_full: Optional[float] = None
+        self.closed = False
+
+    @property
+    def pct(self) -> float:
+        if not self.n:
+            return 0.0
+        return len(self.received) / self.n
+
+    @property
+    def criticals_done(self) -> bool:
+        if self.n is None:
+            return False
+        if self.critical is None:
+            return True
+        need = np.flatnonzero(self.critical)
+        return all(int(s) in self.received for s in need)
+
+    def on_data(self, pkt: Packet, notify: Callable[[], None]):
+        if self.closed:
+            return
+        if pkt.kind == "reg":
+            self.n = pkt.meta["n"]
+            self.critical = pkt.meta.get("critical")
+            if self.t_start is None:
+                self.t_start = self.sim.now
+            self.send_ack(Packet(self.flow, -1, 41, kind="ack", meta={}))
+            if self.n is not None and len(self.received) >= self.n \
+                    and self.t_full is None:
+                self.t_full = self.sim.now
+            notify()
+            return
+        self.received.add(pkt.seq)
+        ack = Packet(self.flow, pkt.seq, 41, kind="ack",
+                     meta={"echo": pkt.meta, "order": pkt.meta.get("order", -1)})
+        self.send_ack(ack)
+        if self.n is not None and len(self.received) >= self.n and self.t_full is None:
+            self.t_full = self.sim.now
+        notify()
+
+    def bubbles(self) -> np.ndarray:
+        """(n,) bool — packets that must be zero-filled at close."""
+        if self.n is None:
+            return np.zeros(0, bool)
+        mask = np.ones(self.n, bool)
+        for s in self.received:
+            if 0 <= s < self.n:
+                mask[s] = False
+        return mask
+
+
+class PSGatherReceiver:
+    """The PS side of one gather iteration over W flows (paper Fig 7).
+
+    close rule: before LT -> wait for 100%; in [LT, deadline) -> close when
+    aggregate pct >= threshold and all criticals are in; at deadline ->
+    close unconditionally (criticals are retransmitted via CQ and in
+    practice always land before the deadline; if not, the close is late —
+    counted in stats).
+    """
+
+    def __init__(self, sim: Sim, flows: List[int], lt_threshold: float,
+                 deadline: float, pct_threshold: float,
+                 send_stop: Callable[[int], None],
+                 on_close: Optional[Callable[["PSGatherReceiver"], None]] = None):
+        self.sim = sim
+        self.lt = lt_threshold
+        self.deadline = deadline
+        self.pct_threshold = pct_threshold
+        self.send_stop = send_stop
+        self.on_close = on_close
+        self.flows: Dict[int, LTPFlowReceiver] = {}
+        self.t0 = sim.now
+        self.closed = False
+        self.close_time: Optional[float] = None
+        for f in flows:
+            self.flows[f] = LTPFlowReceiver(sim, lambda p: None, f)
+        sim.at(self.t0 + lt_threshold, self._check)
+        sim.at(self.t0 + deadline, self._check)
+
+    def attach_ack(self, flow: int, send_ack: Callable[[Packet], None]):
+        self.flows[flow].send_ack = send_ack
+
+    def on_data(self, pkt: Packet):
+        fr = self.flows.get(pkt.flow)
+        if fr is None or self.closed:
+            return
+        fr.on_data(pkt, self._check)
+
+    @property
+    def agg_pct(self) -> float:
+        ps = [f.pct for f in self.flows.values()]
+        return float(np.mean(ps)) if ps else 0.0
+
+    @property
+    def all_full(self) -> bool:
+        return all(f.n is not None and len(f.received) >= f.n
+                   for f in self.flows.values())
+
+    @property
+    def criticals_done(self) -> bool:
+        return all(f.criticals_done for f in self.flows.values())
+
+    def _check(self):
+        if self.closed:
+            return
+        t = self.sim.now - self.t0
+        if self.all_full:
+            self._close()
+            return
+        if t >= self.deadline:
+            if self.criticals_done:
+                self._close()
+            # else: criticals still owed; CQ retransmissions land shortly —
+            # the close fires on the arrival that completes them.
+            return
+        if t >= self.lt and self.agg_pct >= self.pct_threshold and self.criticals_done:
+            self._close()
+
+    def _close(self):
+        self.closed = True
+        self.close_time = self.sim.now
+        for f in self.flows:
+            self.send_stop(f)
+        for fr in self.flows.values():
+            fr.closed = True
+        if self.on_close:
+            self.on_close(self)
+
+    # --- results -------------------------------------------------------------
+    def delivered_fracs(self) -> np.ndarray:
+        return np.array([f.pct for f in self.flows.values()])
+
+    def full_times(self) -> np.ndarray:
+        return np.array([
+            (f.t_full - self.t0) if f.t_full is not None else np.inf
+            for f in self.flows.values()
+        ])
+
+    def bst_gather(self) -> float:
+        return (self.close_time or self.sim.now) - self.t0

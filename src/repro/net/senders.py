@@ -1,0 +1,611 @@
+"""Sender-side congestion-control state machines.
+
+Reno / Cubic are order-preserving, cumulative-ACK, loss-as-congestion.
+BBR is a simplified BDP prober (loss-agnostic rate control, reliable).
+LTP (paper §III/§IV): out-of-order transmission, per-packet ACK,
+3-OOO-ACK loss detection, CQ/NQ/RQ queues, BDP-based CC with approximate
+pacing, and receiver-driven Early Close ("stop").
+"""
+from __future__ import annotations
+
+import collections
+import math
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.net.simcore import Packet, Pipe, Sim
+
+MSS = 1460          # TCP payload bytes per packet
+TCP_OVERHEAD = 40
+LTP_PAYLOAD = 1435  # 1500 - 28 (UDP/IP) - 9 (LTP header) ≈ paper §IV-A
+LTP_OVERHEAD = 37
+
+
+class RateEstimator:
+    """BBR-style windowed max(delivery rate) + min(rtt)."""
+
+    def __init__(self, sim: Sim):
+        self.sim = sim
+        self.rtprop = math.inf
+        self._acks: Deque[Tuple[float, int]] = collections.deque()
+        self._ack_bytes = 0
+        self._bw_samples: Deque[Tuple[float, float]] = collections.deque()
+        self._btlbw = 0.0
+
+    def on_ack(self, nbytes: int, rtt: float):
+        now = self.sim.now
+        self.rtprop = min(self.rtprop, rtt)
+        self._acks.append((now, nbytes))
+        self._ack_bytes += nbytes
+        horizon = max(self.rtprop * 2, 2e-3) if math.isfinite(self.rtprop) else 10e-3
+        while self._acks and self._acks[0][0] < now - horizon:
+            self._ack_bytes -= self._acks.popleft()[1]
+        if len(self._acks) >= 2:
+            dt = self._acks[-1][0] - self._acks[0][0]
+            nb = self._ack_bytes - self._acks[0][1]
+            if dt > 0:
+                rate = nb * 8.0 / dt
+                # monotonic deque: windowed max in O(1) amortized
+                while self._bw_samples and self._bw_samples[-1][1] <= rate:
+                    self._bw_samples.pop()
+                self._bw_samples.append((now, rate))
+        bw_horizon = max(self.rtprop * 10, 20e-3) if math.isfinite(self.rtprop) else 0.1
+        while self._bw_samples and self._bw_samples[0][0] < now - bw_horizon:
+            self._bw_samples.popleft()
+
+    @property
+    def btlbw(self) -> float:
+        return self._bw_samples[0][1] if self._bw_samples else 0.0
+
+    def bdp_pkts(self, mss: int) -> float:
+        if not math.isfinite(self.rtprop) or self.btlbw <= 0:
+            return 10.0
+        return max(4.0, self.btlbw * self.rtprop / 8.0 / mss)
+
+
+# ============================================================================
+# Order-preserving TCP family
+# ============================================================================
+
+
+class TcpReceiver:
+    """Cumulative-ACK receiver shared by Reno/Cubic/BBR."""
+
+    def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
+        self.sim = sim
+        self.send_ack = send_ack
+        self.flow = flow
+        self.received: Set[int] = set()
+        self.next_expected = 0
+        self.complete_time: Optional[float] = None
+        self.n_total: Optional[int] = None
+
+    def on_data(self, pkt: Packet):
+        if pkt.kind == "reg":
+            self.n_total = pkt.meta["n"]
+        else:
+            self.received.add(pkt.seq)
+            while self.next_expected in self.received:
+                self.next_expected += 1
+        ack = Packet(self.flow, pkt.seq, TCP_OVERHEAD, kind="ack",
+                     meta={"cum": self.next_expected, "echo": pkt.meta})
+        self.send_ack(ack)
+        if self.n_total is not None and self.next_expected >= self.n_total \
+                and self.complete_time is None:
+            self.complete_time = self.sim.now
+
+
+class _TcpBase:
+    """Window-based reliable sender skeleton with SACK-style recovery
+    (Linux-default behaviour). Reno/Cubic differ only in the cwnd law."""
+
+    DUPTHRESH = 3
+
+    def __init__(self, sim: Sim, pipe: Pipe, deliver: Callable, n_packets: int,
+                 flow: int = 0, mss: int = MSS, on_done: Optional[Callable] = None):
+        self.sim = sim
+        self.pipe = pipe
+        self.deliver = deliver
+        self.n = n_packets
+        self.flow = flow
+        self.mss = mss
+        self.on_done = on_done
+        self.cwnd = 10.0
+        self.ssthresh = math.inf
+        self.next_new = 0
+        self.cum = 0
+        self.dup = 0
+        self.recover = -1
+        self.inflight: Set[int] = set()
+        self.sacked: Set[int] = set()
+        self.retx: collections.deque = collections.deque()
+        self.marked: Set[int] = set()   # lost-marked this recovery episode
+        self._scan_hi = 0               # scoreboard scan high-water mark
+        self.sent_time: Dict[int, float] = {}
+        self.srtt: Optional[float] = None
+        self.rttvar = 0.0
+        self.rto_event: Optional[int] = None
+        self.done = False
+        self.start_time: Optional[float] = None
+        self.bytes_acked = 0
+
+    # --- cwnd law hooks -----------------------------------------------------
+    def on_ack_growth(self, newly: int):
+        if self.cwnd < self.ssthresh:
+            self.cwnd += newly
+        else:
+            self.cwnd += newly / self.cwnd
+
+    def on_loss_cut(self):
+        self.ssthresh = max(2.0, self.cwnd / 2.0)
+        self.cwnd = self.ssthresh
+
+    # -------------------------------------------------------------------------
+    def start(self):
+        self.start_time = self.sim.now
+        self._arm_rto()
+        self._pump()
+
+    @property
+    def rto(self) -> float:
+        if self.srtt is None:
+            return 0.2
+        return max(0.01, self.srtt + 4 * self.rttvar)
+
+    def _arm_rto(self):
+        if self.rto_event is not None:
+            self.sim.cancel(self.rto_event)
+        self.tlp_armed = True
+        delay = max(2 * (self.srtt or 0.05), 0.002)
+        self.rto_event = self.sim.after(min(delay, self.rto), self._on_tlp)
+
+    def _on_tlp(self):
+        """Tail-loss probe: retransmit the head once before a full RTO."""
+        if self.done:
+            return
+        self._prune_inflight()
+        if self.cum < self.next_new and self.cum not in self.sacked:
+            self._send(self.cum)
+        self.rto_event = self.sim.after(self.rto, self._on_rto)
+        self._pump()
+
+    def _on_rto(self):
+        if self.done:
+            return
+        self.ssthresh = max(2.0, self.cwnd / 2.0)
+        self.cwnd = 1.0
+        self.dup = 0
+        self.recover = -1
+        self.inflight.clear()
+        self.retx.clear()
+        self.marked = set()
+        self._scan_hi = self.cum
+        for s in range(self.cum, self.next_new):
+            if s not in self.sacked:
+                self.marked.add(s)
+                self.retx.append(s)
+        self._arm_rto()
+        self._pump()
+
+    def _mark_lost(self, s: int):
+        if s in self.marked or s in self.sacked or s < self.cum:
+            return
+        self.marked.add(s)
+        self.inflight.discard(s)
+        self.retx.append(s)
+
+    def _send(self, seq: int):
+        pkt = Packet(self.flow, seq, self.mss, kind="data",
+                     meta={"t": self.sim.now})
+        self.inflight.add(seq)
+        self.sent_time[seq] = self.sim.now
+        self.pipe.send(pkt, self.deliver)
+
+    def _prune_inflight(self):
+        """Expire inflight entries older than RTO (silent queue drops would
+        otherwise pin the window shut)."""
+        cutoff = self.sim.now - self.rto
+        stale = [s for s in self.inflight if self.sent_time.get(s, 0) < cutoff]
+        for s in stale:
+            self.inflight.discard(s)
+            if s >= self.cum and s not in self.sacked and s not in self.retx:
+                self.retx.append(s)
+
+    def _pump(self):
+        while len(self.inflight) < int(self.cwnd):
+            if self.retx:
+                seq = self.retx.popleft()
+                if seq >= self.cum and seq not in self.sacked:
+                    self._send(seq)
+                continue
+            if self.next_new < self.n:
+                self._send(self.next_new)
+                self.next_new += 1
+            else:
+                break
+
+    def on_ack(self, pkt: Packet):
+        if self.done:
+            return
+        cum = pkt.meta["cum"]
+        echo = pkt.meta.get("echo") or {}
+        if "t" in echo:
+            rtt = self.sim.now - echo["t"]
+            if self.srtt is None:
+                self.srtt, self.rttvar = rtt, rtt / 2
+            else:
+                self.rttvar = 0.75 * self.rttvar + 0.25 * abs(self.srtt - rtt)
+                self.srtt = 0.875 * self.srtt + 0.125 * rtt
+        # SACK: the data seq this ACK acknowledges
+        if pkt.seq >= self.cum:
+            if pkt.seq not in self.sacked:
+                self.sacked.add(pkt.seq)
+                self._arm_rto()   # any forward progress re-arms the timer
+            self.inflight.discard(pkt.seq)
+        if cum > self.cum:
+            newly = cum - self.cum
+            self.bytes_acked += newly * self.mss
+            for s in range(self.cum, cum):
+                self.inflight.discard(s)
+                self.sacked.discard(s)
+            self.cum = cum
+            self.dup = 0
+            if self.recover >= 0 and cum > self.recover:
+                self.recover = -1
+            elif self.recover >= 0 and cum < self.next_new and \
+                    cum not in self.sacked:
+                self._mark_lost(cum)   # NewReno partial-ACK retransmit
+            self.on_ack_growth(newly)
+            self._arm_rto()
+        elif cum == self.cum and cum < self.n:
+            self.dup += 1
+            if self.dup >= self.DUPTHRESH and self.sacked:
+                # SACK scoreboard: unSACKed seqs DUPTHRESH below the highest
+                # SACKed seq are lost. Rate cut once per recovery episode;
+                # ``marked`` + the scan pointer keep this O(1) amortized.
+                hs = max(self.sacked)
+                if self.recover < 0:
+                    self.recover = self.next_new
+                    self.on_loss_cut()
+                    self.marked = set()
+                    self._scan_hi = self.cum
+                for s in range(self._scan_hi, max(self._scan_hi, hs - self.DUPTHRESH + 1)):
+                    if s not in self.sacked:
+                        self._mark_lost(s)
+                self._scan_hi = max(self._scan_hi, hs - self.DUPTHRESH + 1)
+                if self.cum not in self.sacked:
+                    self._mark_lost(self.cum)
+        if self.cum >= self.n:
+            self.done = True
+            if self.rto_event is not None:
+                self.sim.cancel(self.rto_event)
+            if self.on_done:
+                self.on_done(self)
+            return
+        self._pump()
+
+
+class RenoSender(_TcpBase):
+    pass
+
+
+class CubicSender(_TcpBase):
+    C = 0.4
+    BETA = 0.7
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.wmax = 0.0
+        self.epoch: Optional[float] = None
+
+    def on_loss_cut(self):
+        self.wmax = self.cwnd
+        self.cwnd = max(2.0, self.cwnd * self.BETA)
+        self.ssthresh = self.cwnd
+        self.epoch = None
+
+    def on_ack_growth(self, newly: int):
+        if self.cwnd < self.ssthresh:
+            self.cwnd += newly
+            return
+        if self.epoch is None:
+            self.epoch = self.sim.now
+            self.k = (self.wmax * (1 - self.BETA) / self.C) ** (1.0 / 3.0)
+        t = self.sim.now - self.epoch
+        target = self.C * (t - self.k) ** 3 + self.wmax
+        if target > self.cwnd:
+            self.cwnd = min(target, self.cwnd + newly)
+        else:
+            self.cwnd += 0.01 * newly
+
+
+class BBRSender(_TcpBase):
+    """Paced BDP sender; loss does not cut the rate (reliable via retx)."""
+
+    GAINS = [1.25, 0.75, 1, 1, 1, 1, 1, 1]
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.est = RateEstimator(self.sim)
+        self.phase = 0
+        self.phase_start = 0.0
+        self.startup = True
+        self.full_bw = 0.0
+        self.full_cnt = 0
+        self.next_send_time = 0.0
+        self.pacing_timer: Optional[int] = None
+        self.round_end_seq = 0  # cum level that closes the current round
+
+    def on_loss_cut(self):  # loss is not a congestion signal
+        pass
+
+    def on_ack_growth(self, newly: int):
+        pass
+
+    def _gain(self) -> float:
+        if self.startup:
+            return 2.885
+        if math.isfinite(self.est.rtprop) and \
+                self.sim.now - self.phase_start > self.est.rtprop:
+            self.phase = (self.phase + 1) % len(self.GAINS)
+            self.phase_start = self.sim.now
+        return self.GAINS[self.phase]
+
+    def _cap(self) -> float:
+        return 2.0 * self.est.bdp_pkts(self.mss) if not self.startup else \
+            max(10.0, 3.0 * self.est.bdp_pkts(self.mss))
+
+    def _pump(self):
+        if self.done:
+            return
+        if len(self.inflight) >= self._cap():
+            return
+        rate = self.est.btlbw * self._gain()
+        if rate <= 0:
+            rate = float("inf")  # no estimate yet: blast the initial window
+        if self.sim.now < self.next_send_time:
+            if self.pacing_timer is None:
+                def fire():
+                    self.pacing_timer = None
+                    self._pump()
+                self.pacing_timer = self.sim.at(self.next_send_time, fire)
+            return
+        seq = None
+        while self.retx and seq is None:
+            seq = self.retx.popleft()
+            if seq < self.cum or seq in self.sacked:
+                seq = None
+        if seq is None and self.next_new < self.n:
+            seq = self.next_new
+            self.next_new += 1
+        if seq is None:
+            return
+        self._send(seq)
+        self.next_send_time = self.sim.now + self.mss * 8.0 / rate
+        self.sim.at(self.next_send_time, self._pump)
+
+    def on_ack(self, pkt: Packet):
+        echo = pkt.meta.get("echo") or {}
+        if "t" in echo:
+            self.est.on_ack(self.mss, self.sim.now - echo["t"])
+        if self.startup and pkt.meta["cum"] >= self.round_end_seq:
+            # once per round-trip of data: has btlbw plateaued?
+            self.round_end_seq = self.next_new
+            bw = self.est.btlbw
+            if bw > self.full_bw * 1.25:
+                self.full_bw = bw
+                self.full_cnt = 0
+            else:
+                self.full_cnt += 1
+                if self.full_cnt >= 3:
+                    self.startup = False
+        super().on_ack(pkt)
+
+
+# ============================================================================
+# LTP sender (paper §III-D, §IV-B)
+# ============================================================================
+
+
+class LTPSender:
+    """Out-of-order sender with CQ/NQ/RQ queues and BDP-based CC."""
+
+    OOO_THRESH = 3
+
+    def __init__(self, sim: Sim, pipe: Pipe, deliver: Callable, n_packets: int,
+                 critical: Optional[np.ndarray] = None, flow: int = 0,
+                 payload: int = LTP_PAYLOAD, rng: Optional[np.random.Generator] = None,
+                 on_done: Optional[Callable] = None):
+        self.sim = sim
+        self.pipe = pipe
+        self.deliver = deliver
+        self.n = n_packets
+        self.flow = flow
+        self.payload = payload
+        self.rng = rng or np.random.default_rng(0)
+        self.on_done = on_done
+        crit = critical if critical is not None else np.zeros(n_packets, bool)
+        if n_packets > 0:   # paper: first/last bytes of the stream are critical
+            crit = crit.copy()
+            crit[0] = crit[-1] = True
+        self.critical = crit
+        self.cq: Deque[int] = collections.deque(np.flatnonzero(crit).tolist())
+        self.nq: Deque[int] = collections.deque(np.flatnonzero(~crit).tolist())
+        self.rq: List[int] = []
+        self.est = RateEstimator(sim)
+        self.send_order: Dict[int, int] = {}
+        self.order_ctr = 0
+        self.outstanding: Deque[Tuple[int, int]] = collections.deque()  # (order, seq)
+        self.acked: Set[int] = set()
+        self.highest_acked_order = -1
+        self.stopped = False
+        self.done = False
+        self.startup = True
+        self.full_bw = 0.0
+        self.full_cnt = 0
+        self.next_send_time = 0.0
+        self.total_sent = 0
+        self.start_time: Optional[float] = None
+        self.watchdog: Optional[int] = None
+        self.pacing_timer: Optional[int] = None
+
+    def start(self):
+        self.start_time = self.sim.now
+        self.reg_acked = False
+        self._send_reg()
+        self._pump()
+        self._arm_watchdog()
+
+    def _send_reg(self):
+        """Registration carries the flow metadata — critical, so it is
+        retried until acknowledged (paper §III-E: critical = 100%)."""
+        if self.reg_acked or self.done:
+            return
+        reg = Packet(self.flow, -1, 64, kind="reg",
+                     meta={"n": self.n, "t": self.sim.now, "critical": self.critical})
+        self.pipe.send(reg, self.deliver)
+        self.sim.after(max(3 * self.est.rtprop, 5e-3)
+                       if math.isfinite(self.est.rtprop) else 20e-3,
+                       self._send_reg)
+
+    def _arm_watchdog(self):
+        if self.watchdog is not None:
+            self.sim.cancel(self.watchdog)
+        # per-packet retransmission timer: a few RTTs (ack losses must not
+        # stall the flow — there is no cumulative-ACK recovery in LTP)
+        delay = max(3 * self.est.rtprop, 3e-3) if math.isfinite(self.est.rtprop) else 0.2
+        self.watchdog = self.sim.after(delay, self._on_watchdog)
+
+    def _on_watchdog(self):
+        """Stall recovery: treat all outstanding as lost (per-packet RTO)."""
+        if self.done or self.stopped:
+            return
+        while self.outstanding:
+            _, seq = self.outstanding.popleft()
+            if seq not in self.acked:
+                self._requeue_lost(seq)
+        self._arm_watchdog()
+        self._pump()
+
+    def _requeue_lost(self, seq: int):
+        if self.critical[seq]:
+            self.cq.append(seq)
+        else:
+            pos = self.rng.integers(0, len(self.rq) + 1)  # random-in, first-out
+            self.rq.insert(int(pos), seq)
+
+    def _next_seq(self) -> Optional[int]:
+        while self.cq:
+            s = self.cq.popleft()
+            if s not in self.acked:
+                return s
+        while self.nq:
+            s = self.nq.popleft()
+            if s not in self.acked:
+                return s
+        while self.rq:
+            s = self.rq.pop(0)
+            if s not in self.acked:
+                return s
+        return None
+
+    GAINS = [1.25, 0.75, 1, 1, 1, 1, 1, 1]  # BBR-style probe cycle (§III-D)
+
+    def _cap(self) -> float:
+        # BDP-based inflight bound (paper §III-D); 2x headroom mirrors BBR's
+        # cwnd_gain so LTP holds its share next to BBR (paper Fig 15)
+        bdp = self.est.bdp_pkts(self.payload)
+        return max(10.0, 2.0 * bdp)
+
+    def _gain(self) -> float:
+        if self.startup:
+            return 2.885
+        if math.isfinite(self.est.rtprop) and \
+                self.sim.now - getattr(self, "_phase_start", 0.0) > self.est.rtprop:
+            self._phase = (getattr(self, "_phase", 0) + 1) % len(self.GAINS)
+            self._phase_start = self.sim.now
+        return self.GAINS[getattr(self, "_phase", 0)]
+
+    def _pump(self):
+        if self.done or self.stopped:
+            return
+        while len(self.outstanding) < self._cap():
+            if self.sim.now < self.next_send_time:
+                if self.pacing_timer is None:
+                    def fire():
+                        self.pacing_timer = None
+                        self._pump()
+                    self.pacing_timer = self.sim.at(self.next_send_time, fire)
+                return
+            seq = self._next_seq()
+            if seq is None:
+                return
+            order = self.order_ctr
+            self.order_ctr += 1
+            self.send_order[seq] = order
+            self.outstanding.append((order, seq))
+            pkt = Packet(self.flow, seq, self.payload, kind="data",
+                         critical=bool(self.critical[seq]),
+                         meta={"t": self.sim.now, "order": order})
+            self.pipe.send(pkt, self.deliver)
+            self.total_sent += 1
+            # approximate pacing (paper §III-D): rate-limit bursts above 20
+            # packets at the BBR-computed pacing rate
+            rate = self.est.btlbw * self._gain()
+            if rate > 0 and len(self.outstanding) > 20:
+                self.next_send_time = self.sim.now + self.payload * 8.0 / rate
+
+    def on_ack(self, pkt: Packet):
+        if self.done:
+            return
+        if pkt.kind == "stop":
+            self.stopped = True
+            self.done = True
+            if self.watchdog is not None:
+                self.sim.cancel(self.watchdog)
+            if self.on_done:
+                self.on_done(self)
+            return
+        seq = pkt.seq
+        if seq == -1:           # registration ack
+            self.reg_acked = True
+            return
+        echo = pkt.meta.get("echo") or {}
+        if "t" in echo:
+            self.est.on_ack(self.payload, self.sim.now - echo["t"])
+        if self.startup and (
+            not math.isfinite(self.est.rtprop)
+            or self.sim.now - getattr(self, "_last_check", -1.0) > self.est.rtprop
+        ):
+            self._last_check = self.sim.now
+            bw = self.est.btlbw
+            if bw > self.full_bw * 1.25:
+                self.full_bw = bw
+                self.full_cnt = 0
+            else:
+                self.full_cnt += 1
+                if self.full_cnt >= 3:
+                    self.startup = False
+        self.acked.add(seq)
+        order = pkt.meta.get("order", self.send_order.get(seq, -1))
+        self.highest_acked_order = max(self.highest_acked_order, order)
+        self._arm_watchdog()
+        # 3-OOO-ACK loss detection over the outgoing order queue
+        while self.outstanding:
+            o, s = self.outstanding[0]
+            if s in self.acked:
+                self.outstanding.popleft()
+            elif self.highest_acked_order - o >= self.OOO_THRESH:
+                self.outstanding.popleft()
+                self._requeue_lost(s)
+            else:
+                break
+        if len(self.acked) >= self.n:
+            self.done = True
+            if self.watchdog is not None:
+                self.sim.cancel(self.watchdog)
+            if self.on_done:
+                self.on_done(self)
+            return
+        self._pump()

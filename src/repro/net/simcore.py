@@ -1,0 +1,115 @@
+"""Discrete-event core: event loop + lossy serialized pipes.
+
+A ``Pipe`` models one direction of a link: store-and-forward serialization
+at ``rate_bps``, a droptail queue (in packets) at its ingress, i.i.d.
+non-congestion random loss, and fixed propagation delay. The incast
+scenarios attach many senders to one shared bottleneck pipe — the ToR's
+egress port toward the PS — which is where the paper's long-tail latency
+is born.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Packet:
+    flow: int
+    seq: int              # packet sequence within the flow (jigsaw piece id)
+    size: int             # bytes on the wire
+    kind: str = "data"    # data | ack | stop | reg | end
+    critical: bool = False
+    meta: Any = None      # protocol payload (e.g. acked seq, send stamp)
+
+
+class Sim:
+    """Event loop. Callbacks run at monotonically nondecreasing times."""
+
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List = []
+        self._ids = itertools.count()
+        self.cancelled: set = set()
+
+    def at(self, t: float, fn: Callable[[], None]) -> int:
+        eid = next(self._ids)
+        heapq.heappush(self._heap, (max(t, self.now), eid, fn))
+        return eid
+
+    def after(self, dt: float, fn: Callable[[], None]) -> int:
+        return self.at(self.now + dt, fn)
+
+    def cancel(self, eid: int) -> None:
+        self.cancelled.add(eid)
+
+    def run(self, until: float = float("inf"), max_events: int = 100_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            t, eid, fn = heapq.heappop(self._heap)
+            if eid in self.cancelled:
+                self.cancelled.discard(eid)
+                continue
+            if t > until:
+                heapq.heappush(self._heap, (t, eid, fn))
+                break
+            self.now = t
+            fn()
+            n += 1
+        return n
+
+
+class Pipe:
+    """One-direction link: droptail queue -> serializer -> loss -> delay."""
+
+    def __init__(
+        self,
+        sim: Sim,
+        rate_bps: float,
+        delay: float,
+        loss: float = 0.0,
+        queue_pkts: int = 256,
+        rng: Optional[np.random.Generator] = None,
+        overhead: int = 0,
+    ):
+        self.sim = sim
+        self.rate = rate_bps
+        self.delay = delay
+        self.loss = loss
+        self.cap = queue_pkts
+        self.rng = rng or np.random.default_rng(0)
+        self.busy_until = 0.0
+        self.overhead = overhead  # per-packet header bytes on the wire
+        self.n_sent = 0
+        self.n_dropped_queue = 0
+        self.n_dropped_loss = 0
+        self.bytes_delivered = 0
+
+    def queue_len(self) -> float:
+        backlog = max(0.0, self.busy_until - self.sim.now)
+        return backlog * self.rate / 8.0 / 1500.0
+
+    def send(self, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
+        """Returns False if droptail-dropped at enqueue."""
+        if self.queue_len() >= self.cap:
+            self.n_dropped_queue += 1
+            return False
+        wire = pkt.size + self.overhead
+        start = max(self.sim.now, self.busy_until)
+        self.busy_until = start + wire * 8.0 / self.rate
+        self.n_sent += 1
+        if self.rng.random() < self.loss:
+            self.n_dropped_loss += 1
+            return True  # consumed wire time, dropped in flight
+        arrive = self.busy_until + self.delay
+        self.bytes_delivered += pkt.size
+
+        def _deliver(p=pkt):
+            deliver(p)
+
+        self.sim.at(arrive, _deliver)
+        return True

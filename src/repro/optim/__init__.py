@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    lr_at,
+    make_optimizer,
+    sgd_momentum,
+)

@@ -1,0 +1,96 @@
+"""Optimizers (no external deps): SGD+momentum (the paper's setup) and AdamW.
+
+Functional: ``init(params) -> state``, ``update(grads, state, params) ->
+(updates, state)``; updates are ADDED to params. States are pytrees with
+the same sharding as params (elementwise ops — GSPMD propagates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (updates, new_state)
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        def new_m(g, m, p):
+            g = g.astype(m.dtype)
+            if weight_decay:
+                g = g + weight_decay * p.astype(m.dtype)
+            return momentum * m + g
+
+        def upd(g, m_new, p):
+            g = g.astype(m_new.dtype)
+            step = (momentum * m_new + g) if nesterov else m_new
+            return (-lr * step).astype(p.dtype)
+
+        m = jax.tree.map(new_m, grads, state["m"], params)
+        updates = jax.tree.map(upd, grads, m, params)
+        return updates, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        m = jax.tree.map(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            grads, state["m"])
+        v = jax.tree.map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["v"])
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return adamw(weight_decay=cfg.weight_decay)
+    return sgd_momentum(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+
+
+def lr_at(cfg: TrainConfig, step, steps_per_epoch: int = 0):
+    """Paper schedule: lr *= decay every ``lr_decay_every`` epochs."""
+    lr = cfg.lr
+    if cfg.lr_decay_every and steps_per_epoch:
+        epoch = step // steps_per_epoch
+        n = epoch // cfg.lr_decay_every
+        lr = cfg.lr * (cfg.lr_decay ** n)
+    return lr

@@ -1,0 +1,2 @@
+from repro.train.trainer import TrainState, make_plain_train_step, make_ltp_train_step  # noqa: F401
+from repro.train.dp_sim import PSTrainer  # noqa: F401

@@ -1,0 +1,197 @@
+"""PSTrainer — the paper's 8-worker/1-PS training loop, exactly, on one
+host device.
+
+Per-worker gradients come from a ``vmap`` over the worker axis (identical
+semantics to W data-parallel machines holding replicated weights). The
+transport layer is pluggable:
+
+  * protocol="ltp":      Early Close controller decides each iteration's
+                         per-worker delivered fraction; non-critical packets
+                         drop i.i.d.; bubbles are zero-filled; compensation
+                         per LTPConfig. BST comes from the same controller.
+  * protocol tcp-family: lossless sync (delivered=1); BST from the transport
+                         model (or DES samples) — only wall-clock differs.
+
+Wall-clock per iteration = compute_time + BST, which is how throughput
+(Fig 12), TTA (Fig 13) and BST (Fig 14) are all derived from one loop.
+Transport timing backend: AnalyticIncastModel (fast) or precomputed DES
+samples (pass ``bst_trace``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.core import packets as pk
+from repro.core.early_close import (
+    AnalyticIncastModel,
+    EarlyCloseController,
+    broadcast_time,
+)
+from repro.models.api import ModelApi
+from repro.optim import Optimizer, lr_at
+
+
+def params_bytes(params) -> int:
+    return sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
+
+
+class PSTrainer:
+    def __init__(
+        self,
+        api: ModelApi,
+        opt: Optimizer,
+        train: TrainConfig,
+        ltp: LTPConfig,
+        net: NetConfig,
+        n_workers: int = 8,
+        protocol: str = "ltp",
+        compute_time: float = 0.05,
+        bst_trace: Optional[np.ndarray] = None,
+        delivered_trace: Optional[np.ndarray] = None,
+        seed: int = 0,
+    ):
+        self.api = api
+        self.opt = opt
+        self.train_cfg = train
+        self.ltp = ltp
+        self.net = net
+        self.w = n_workers
+        self.protocol = protocol
+        self.compute_time = compute_time
+        self.bst_trace = bst_trace
+        self.delivered_trace = delivered_trace
+        key = jax.random.PRNGKey(seed)
+        self.params = api.init(key)
+        self.opt_state = opt.init(self.params)
+        self.plan = pk.make_plan(
+            self.params, ltp.packet_floats, ltp.critical_per_tensor
+        )
+        self.residual = (
+            jnp.zeros((n_workers, self.plan.n_packets, self.plan.packet_floats))
+            if ltp.error_feedback else None
+        )
+        self.model_bytes = self.plan.n_floats * 4
+        self.controller = EarlyCloseController(ltp, net, n_workers, self.model_bytes)
+        self.gather_model = AnalyticIncastModel(
+            net, n_workers, protocol=protocol, seed=seed + 1
+        )
+        self.sim_time = 0.0
+        self.step_idx = 0
+        self.history: List[Dict] = []
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        api, opt, ltp, plan, w = self.api, self.opt, self.ltp, self.plan, self.w
+        use_ltp = self.protocol == "ltp"
+
+        def per_worker_grads(params, batch):
+            def one(b):
+                return jax.value_and_grad(lambda p: api.loss_fn(p, b))(params)
+            return jax.vmap(one)(batch)   # (W,) losses, (W, ...) grads
+
+        def step(params, opt_state, residual, batch, frac, key, lr):
+            losses, grads_w = per_worker_grads(params, batch)
+            flat_w = jax.vmap(lambda g: pk.flatten(plan, g))(grads_w)
+            if use_ltp:
+                if residual is not None:
+                    flat_w = flat_w + residual
+                keys = jax.random.split(key, w)
+                masks = jax.vmap(
+                    lambda k, f: pk.delivery_mask(plan, k, f)
+                )(keys, frac)                     # (W, n_pkts)
+                sent = flat_w * masks[:, :, None]
+                new_residual = flat_w - sent if residual is not None else None
+                tot = jnp.sum(sent, axis=0)
+                if ltp.compensation == "count":
+                    cnt = jnp.maximum(jnp.sum(masks, axis=0), 1.0)
+                    mean_flat = tot / cnt[:, None]
+                elif ltp.compensation == "expected":
+                    mean_flat = tot / (w * jnp.maximum(jnp.mean(frac), 1e-6))
+                else:
+                    mean_flat = tot / w
+                realized = jnp.mean(masks)
+            else:
+                mean_flat = jnp.mean(flat_w, axis=0)
+                new_residual = residual
+                realized = jnp.ones(())
+            dtypes = [l.dtype for l in jax.tree_util.tree_leaves(params)]
+            mean_grads = pk.unflatten(plan, mean_flat, dtypes)
+            updates, opt_state = opt.update(mean_grads, opt_state, params, lr)
+            params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return params, opt_state, new_residual, jnp.mean(losses), realized
+
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def _transport(self, it: int):
+        """Returns (bst_seconds, delivered_frac (W,))."""
+        if self.bst_trace is not None:
+            bst = float(self.bst_trace[it % len(self.bst_trace)])
+            if self.delivered_trace is not None:
+                return bst, np.asarray(self.delivered_trace[it % len(self.delivered_trace)])
+            return bst, np.ones(self.w)
+        sample = self.gather_model.sample(self.model_bytes)
+        if self.protocol == "ltp":
+            close, frac = self.controller.step(sample)
+            bst = close + broadcast_time(self.net, self.model_bytes)
+        else:
+            bst = float(sample.completion_times.max()) + broadcast_time(
+                self.net, self.model_bytes
+            ) * self.gather_model.loss_inflation()
+            frac = np.ones(self.w)
+        return bst, frac
+
+    def run(self, batches, *, epoch_steps: int = 0, eval_fn=None,
+            eval_every: int = 0, log_every: int = 0) -> List[Dict]:
+        key = jax.random.PRNGKey(self.train_cfg.seed + 17)
+        for batch in batches:
+            batch = jax.tree.map(
+                lambda x: jnp.asarray(x).reshape(
+                    (self.w, x.shape[0] // self.w) + x.shape[1:]
+                ),
+                batch,
+            )
+            bst, frac = self._transport(self.step_idx)
+            key, sub = jax.random.split(key)
+            lr = lr_at(self.train_cfg, self.step_idx, epoch_steps)
+            (self.params, self.opt_state, self.residual, loss, realized) = \
+                self._step_fn(self.params, self.opt_state, self.residual,
+                              batch, jnp.asarray(frac, jnp.float32), sub,
+                              jnp.asarray(lr, jnp.float32))
+            self.sim_time += self.compute_time + bst
+            rec = {
+                "step": self.step_idx,
+                "loss": float(loss),
+                "bst": bst,
+                "delivered": float(realized),
+                "sim_time": self.sim_time,
+            }
+            if epoch_steps and (self.step_idx + 1) % epoch_steps == 0:
+                self.controller.new_epoch()
+            if eval_fn is not None and eval_every and \
+                    (self.step_idx + 1) % eval_every == 0:
+                rec["eval"] = float(eval_fn(self.params))
+            self.history.append(rec)
+            if log_every and self.step_idx % log_every == 0:
+                msg = f"step {self.step_idx:5d} loss {rec['loss']:.4f} " \
+                      f"bst {bst*1e3:6.1f}ms delivered {rec['delivered']:.3f}"
+                if "eval" in rec:
+                    msg += f" eval {rec['eval']:.4f}"
+                print(msg, flush=True)
+            self.step_idx += 1
+        return self.history
+
+    # throughput in items/sec of simulated wall-clock
+    def throughput(self, items_per_step: int) -> float:
+        if not self.history:
+            return 0.0
+        return items_per_step * len(self.history) / self.sim_time

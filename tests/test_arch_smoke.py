@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family,
+one forward/train step on CPU, asserting output shapes + no NaNs; decode
+smoke where the family supports it (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models import build
+from repro.models.api import demo_inputs, shape_supported
+from repro.optim import sgd_momentum
+from repro.shapes import InputShape
+
+TRAIN = InputShape("t", 64, 2, "train")
+DECODE = InputShape("d", 96, 2, "decode")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    api = build(cfg)
+    params = api.init(KEY)
+    batch = demo_inputs(cfg, TRAIN, KEY)
+    loss, grads = jax.value_and_grad(lambda p: api.loss_fn(p, batch))(params)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    # one optimizer step moves the loss
+    opt = sgd_momentum()
+    st = opt.init(params)
+    upd, _ = opt.update(grads, st, params, jnp.float32(0.1))
+    params2 = jax.tree.map(lambda p, u: p + u, params, upd)
+    loss2 = api.loss_fn(params2, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) < float(loss) + 1.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    api = build(cfg)
+    if api.decode_step is None:
+        pytest.skip("train-only workload (papernet)")
+    params = api.init(KEY)
+    cache = api.init_cache(2, 96, jnp.float32)
+    tok = jnp.array([1, 2], jnp.int32)
+    logits, cache2 = api.decode_step(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    # cache got written somewhere
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["falcon_mamba_7b", "zamba2_7b"])
+def test_ssm_decode_matches_forward(arch):
+    """Step-by-step decode must reproduce the full-sequence forward
+    (recurrence correctness — the SSM analogue of a KV-cache test)."""
+    cfg = get_reduced(arch).replace(dtype="float32")
+    api = build(cfg)
+    params = api.init(KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (1, 12), 0, cfg.vocab)
+    from repro.models import transformer
+    logits_full, _, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                            remat=False)
+    cache = api.init_cache(1, 16, jnp.float32)
+    outs = []
+    for t in range(12):
+        lg, cache = api.decode_step(params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec[0], np.float32),
+        np.asarray(logits_full[0], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_attention_decode_matches_forward():
+    cfg = get_reduced("smollm_360m").replace(dtype="float32")
+    api = build(cfg)
+    params = api.init(KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 10), 0, cfg.vocab)
+    from repro.models import transformer
+    logits_full, _, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                            remat=False)
+    cache = api.init_cache(2, 16, jnp.float32)
+    outs = []
+    for t in range(10):
+        lg, cache = api.decode_step(params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_decode_matches_forward():
+    cfg = get_reduced("deepseek_v2_236b").replace(dtype="float32")
+    api = build(cfg)
+    params = api.init(KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 3), (1, 8), 0, cfg.vocab)
+    from repro.models import transformer
+    logits_full, _, _ = transformer.forward(cfg, params, {"tokens": toks},
+                                            remat=False)
+    cache = api.init_cache(1, 8, jnp.float32)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    # absorbed decode == decompressed forward (MoE routing may flip on ties)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_sliding_window_attention_banded_equals_masked():
+    """Static-banded window attention == full attention with window mask."""
+    from repro.models.attention import multi_head_attention
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    b, s, h, kv, hd, w = 2, 256, 4, 2, 16, 64
+    q = jax.random.normal(k1, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(k2, (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (b, s, kv, hd), jnp.float32)
+    banded = multi_head_attention(q, k, v, causal=True, window=w, chunk_q=64)
+    # reference: full attention with explicit band mask via _traced path
+    from repro.models.attention import _traced_window_attention
+    full = _traced_window_attention(q, k, v, jnp.int32(w),
+                                    ctx=__import__("repro.models.sharding",
+                                                   fromlist=["NULL_CTX"]).NULL_CTX)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long500k_support_matrix(arch):
+    cfg = get_reduced(arch)
+    long = InputShape("long_500k", 1024, 1, "decode")
+    ok, why = shape_supported(cfg, long)
+    expected = {
+        "falcon_mamba_7b": True, "zamba2_7b": True, "gemma3_1b": True,
+        "mixtral_8x22b": True,
+        "yi_34b": False, "smollm_360m": False, "qwen2_vl_72b": False,
+        "qwen3_14b": False, "whisper_small": False, "deepseek_v2_236b": False,
+        "papernet": False,
+    }
+    assert ok == expected[arch], (arch, why)

@@ -1,0 +1,99 @@
+"""Early Close controller (paper §III-B) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import LTPConfig, NetConfig
+from repro.core.early_close import (
+    AnalyticIncastModel, EarlyCloseController, GatherSample, broadcast_time,
+)
+
+
+def _ctrl(pct=0.8, c_ms=30.0, w=8, size=10e6):
+    net = NetConfig(bandwidth_gbps=10, rtprop_ms=1, loss_rate=0.0)
+    ltp = LTPConfig(data_pct_threshold=pct, deadline_c_ms=c_ms)
+    return EarlyCloseController(ltp, net, w, size), net
+
+
+def test_lt_init_formula():
+    ctrl, net = _ctrl()
+    rt = net.rtprop_ms * 1e-3
+    share = net.bandwidth_gbps * 1e9 / 8 / 8
+    np.testing.assert_allclose(ctrl.lt, 1.5 * rt + 10e6 / share, rtol=1e-9)
+
+
+def test_fast_iteration_closes_at_completion():
+    ctrl, _ = _ctrl()
+    lt = float(ctrl.lt.max())
+    s = GatherSample(completion_times=np.full(8, lt * 0.5),
+                     first_arrival=np.full(8, 1e-3))
+    close, frac = ctrl.step(s)
+    np.testing.assert_allclose(close, lt * 0.5)
+    np.testing.assert_allclose(frac, 1.0)
+
+
+def test_straggler_cut_between_thresholds():
+    ctrl, _ = _ctrl(pct=0.8)
+    lt = float(ctrl.lt.max())
+    tf = np.full(8, lt * 0.9)
+    tf[0] = lt * 5.0   # one starved flow
+    s = GatherSample(tf, np.full(8, 1e-3))
+    close, frac = ctrl.step(s)
+    assert lt <= close <= ctrl.deadline + 1e-9
+    assert frac[1:].min() == 1.0       # fast flows complete
+    assert frac[0] < 0.5               # straggler cut
+    assert np.mean(frac) >= 0.8 - 1e-6
+
+
+def test_deadline_unconditional():
+    ctrl, _ = _ctrl(pct=0.99)
+    lt = float(ctrl.lt.max())
+    s = GatherSample(np.full(8, lt * 50), np.full(8, 1e-3))
+    close, frac = ctrl.step(s)
+    np.testing.assert_allclose(close, ctrl.deadline)
+    assert frac.mean() < 0.99
+
+
+def test_epoch_update_takes_best_full_time():
+    ctrl, _ = _ctrl()
+    lt0 = ctrl.lt.copy()
+    fast = lt0 * 0.6
+    ctrl.step(GatherSample(fast, np.full(8, 1e-3)))
+    ctrl.new_epoch()
+    np.testing.assert_allclose(ctrl.lt, fast, rtol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.5, 0.95), st.integers(0, 1000))
+def test_close_respects_threshold_property(pct, seed):
+    """Invariant: close time in [0, deadline]; if close < deadline then
+    either everything arrived or mean pct >= threshold."""
+    ctrl, _ = _ctrl(pct=pct)
+    rng = np.random.default_rng(seed)
+    lt = float(ctrl.lt.max())
+    tf = lt * rng.uniform(0.3, 3.0, 8)
+    s = GatherSample(tf, np.full(8, 1e-3))
+    close, frac = ctrl.step(s)
+    assert 0 < close <= ctrl.deadline + 1e-9
+    if close < ctrl.deadline - 1e-9:
+        assert (tf.max() <= close + 1e-9) or (frac.mean() >= pct - 1e-6)
+
+
+def test_analytic_model_loss_response():
+    """TCP-family completion inflates sharply with loss; BDP-based doesn't."""
+    w = 8
+    base = {}
+    for proto in ["cubic", "ltp"]:
+        nets = [NetConfig(10, 1, p, 256) for p in (0.0, 0.01)]
+        times = []
+        for net in nets:
+            m = AnalyticIncastModel(net, w, protocol=proto, seed=1)
+            times.append(np.mean([m.sample(10e6).completion_times.mean()
+                                  for _ in range(20)]))
+        base[proto] = times[1] / times[0]
+    assert base["cubic"] > 5 * base["ltp"]
+
+
+def test_broadcast_time_scales_with_size():
+    net = NetConfig(10, 1, 0.0)
+    assert broadcast_time(net, 2e7) > broadcast_time(net, 1e7)

@@ -1,0 +1,117 @@
+"""Network-simulator invariants + protocol behaviour (paper's §V setups)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import LTPConfig, NetConfig
+from repro.net import senders as snd
+from repro.net.ltp_receiver import LTPFlowReceiver, PSGatherReceiver
+from repro.net.scenarios import (
+    fairness_share, incast_gather, p2p_transfer,
+)
+from repro.net.simcore import Packet, Pipe, Sim
+
+
+def test_pipe_serialization_and_delay():
+    sim = Sim()
+    pipe = Pipe(sim, rate_bps=8e6, delay=0.01, loss=0.0, queue_pkts=10,
+                rng=np.random.default_rng(0))
+    got = []
+    for i in range(3):
+        pipe.send(Packet(0, i, 1000), lambda p: got.append((sim.now, p.seq)))
+    sim.run()
+    # 1000B at 1MB/s = 1ms serialization each, +10ms delay
+    times = [t for t, _ in got]
+    np.testing.assert_allclose(times, [0.011, 0.012, 0.013], rtol=1e-6)
+
+
+def test_pipe_loss_and_conservation():
+    sim = Sim()
+    rng = np.random.default_rng(1)
+    pipe = Pipe(sim, 1e9, 0.001, loss=0.3, queue_pkts=10_000, rng=rng)
+    got = []
+    n = 2000
+    for i in range(n):
+        pipe.send(Packet(0, i, 1000), lambda p: got.append(p.seq))
+    sim.run()
+    # delivered + dropped == sent
+    assert len(got) + pipe.n_dropped_loss == n
+    assert abs(len(got) / n - 0.7) < 0.05
+
+
+def test_droptail_queue():
+    sim = Sim()
+    pipe = Pipe(sim, 8e3, 0.0, 0.0, queue_pkts=5, rng=np.random.default_rng(0))
+    ok = [pipe.send(Packet(0, i, 1500), lambda p: None) for i in range(50)]
+    assert sum(ok) < 50 and sum(ok) >= 5
+    assert pipe.n_dropped_queue == 50 - sum(ok)
+
+
+@pytest.mark.parametrize("proto", ["reno", "cubic", "bbr", "ltp"])
+def test_p2p_completes_under_loss(proto):
+    net = NetConfig(bandwidth_gbps=1, rtprop_ms=2, loss_rate=0.01,
+                    queue_pkts=1024)
+    r = p2p_transfer(proto, net, 5e5, seed=2)
+    assert 0 < r["fct"] < 60
+    assert r["utilization"] > 0.005
+
+
+def test_loss_hurts_tcp_not_ltp():
+    """Fig 4 direction: order-preserving CCAs collapse with loss; LTP holds."""
+    clean = NetConfig(10, 1, 0.0, 1024)
+    lossy = NetConfig(10, 1, 0.01, 1024)
+    for proto, min_keep in [("cubic", 0.0), ("ltp", 0.55)]:
+        a = p2p_transfer(proto, clean, 4e6, seed=1)["utilization"]
+        b = p2p_transfer(proto, lossy, 4e6, seed=1)["utilization"]
+        if proto == "cubic":
+            assert b < 0.35 * a   # collapses
+        else:
+            assert b > min_keep * a  # holds
+
+
+def test_incast_ltp_early_close_bounds_bst():
+    net = NetConfig(10, 1, 0.0, 4096)
+    ltp = LTPConfig()
+    rs = incast_gather("ltp", net, 8, 1e6, iters=6, seed=4,
+                       straggler_prob=0.5, straggler_scale=1.0)
+    ect = 1.5e-3 + 1e6 / (10e9 / 8 / 8)
+    deadline_bound = 3 * (ect + ltp.deadline_c_ms * 1e-3)
+    for r in rs:
+        assert r.bst_gather <= deadline_bound
+        assert 0.3 <= r.delivered.mean() <= 1.0
+        assert r.criticals_ok
+
+
+def test_incast_tcp_reliable():
+    net = NetConfig(10, 1, 0.001, 4096)
+    rs = incast_gather("cubic", net, 4, 5e5, iters=3, seed=5)
+    for r in rs:
+        np.testing.assert_array_equal(r.delivered, 1.0)
+
+
+def test_incast_ltp_beats_cubic_bst_under_loss():
+    net = NetConfig(10, 1, 0.005, 4096)
+    bl = np.mean([r.bst_gather for r in
+                  incast_gather("ltp", net, 8, 1e6, iters=6, seed=6)])
+    bc = np.mean([r.bst_gather for r in
+                  incast_gather("cubic", net, 8, 1e6, iters=6, seed=6)])
+    assert bl < bc
+
+
+def test_fairness_ltp_vs_bbr():
+    a, b = fairness_share("ltp", "bbr", NetConfig(10, 1, 0.0, 4096),
+                          duration=0.15, seed=0)
+    assert 0.3 < a < 0.7   # paper Fig 15: near-even split
+
+
+def test_ltp_receiver_bubbles():
+    sim = Sim()
+    fr = LTPFlowReceiver(sim, lambda p: None, 0)
+    fr.on_data(Packet(0, -1, 64, kind="reg",
+                      meta={"n": 10, "critical": np.zeros(10, bool)}),
+               lambda: None)
+    for s in [0, 2, 4, 6, 8]:
+        fr.on_data(Packet(0, s, 100, kind="data", meta={}), lambda: None)
+    bubbles = fr.bubbles()
+    np.testing.assert_array_equal(bubbles, [False, True] * 5)
+    assert fr.pct == 0.5

@@ -20,6 +20,7 @@ from benchmarks import (
     fig13_tta,
     fig15_fairness,
     roofline,
+    sweep_scenarios,
 )
 
 MODULES = {
@@ -30,6 +31,7 @@ MODULES = {
     "fig13_tta": fig13_tta,
     "fig15_fairness": fig15_fairness,
     "roofline": roofline,
+    "scenario_sweep": sweep_scenarios,
 }
 
 

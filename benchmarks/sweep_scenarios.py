@@ -1,0 +1,67 @@
+"""Scenario-grid sweep over the topology engine (DESIGN.md §5).
+
+Runs every gather scenario in the registry grid over protocol x knob:
+
+  multi_ps_gather   n_ps in {1, 2, 4[, 8]}          (sharded-PS scaling)
+  straggler_gather  slow_rate_mult in {0.5, 0.25[, 0.1]}
+  cross_traffic     bg_load in {0.0, 0.5[, 0.8]}
+
+Emits one row per (scenario, protocol, knob): mean/p99 gather BST, mean
+delivered fraction, and LTP's speedup over the same cell's cubic run.
+Transfer sizes are scaled (2 MB quick / 5 MB full per model) so the whole
+grid finishes in seconds on CPU; trends — not absolute seconds — are the
+output.
+
+  PYTHONPATH=src python -m benchmarks.run --only scenario_sweep
+  PYTHONPATH=src python -m benchmarks.sweep_scenarios          # standalone
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config import NetConfig
+from repro.net.scenarios import PROTOCOLS, run_scenario
+
+from benchmarks.common import emit
+
+
+def _cells(quick: bool):
+    n_ps = [1, 2, 4] if quick else [1, 2, 4, 8]
+    slow = [0.5, 0.25] if quick else [0.5, 0.25, 0.1]
+    load = [0.0, 0.5] if quick else [0.0, 0.5, 0.8]
+    for v in n_ps:
+        yield "multi_ps_gather", {"n_ps": v}, f"n_ps={v}"
+    for v in slow:
+        yield "straggler_gather", {"slow_rate_mult": v}, f"slow_mult={v}"
+    for v in load:
+        yield "cross_traffic", {"bg_load": v}, f"bg_load={v}"
+
+
+def run(quick: bool = True):
+    rows = []
+    iters = 4 if quick else 10
+    size = 2e6 if quick else 5e6
+    w = 8
+    net = NetConfig(10, 1, 0.001, 4096)
+    for scenario, kw, knob in _cells(quick):
+        cell = {}
+        for proto in PROTOCOLS:
+            rs = run_scenario(scenario, proto, net, w=w, size_bytes=size,
+                              iters=iters, seed=13, **kw)
+            bst = np.array([r.bst_gather for r in rs])
+            cell[proto] = bst.mean()
+            rows.append({
+                "scenario": scenario, "knob": knob, "protocol": proto,
+                "bst_mean_ms": round(float(bst.mean()) * 1e3, 2),
+                "bst_p99_ms": round(float(np.percentile(bst, 99)) * 1e3, 2),
+                "delivered": round(float(np.mean([r.delivered.mean()
+                                                  for r in rs])), 4),
+            })
+        for r in rows[-len(PROTOCOLS):]:
+            r["ltp_speedup_vs_cubic"] = round(cell["cubic"] / cell["ltp"], 2)
+    emit(rows, "sweep_scenarios")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,62 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``)
+but must also run on the 0.4.x line baked into the CPU container, where
+shard_map lives in ``jax.experimental`` with slightly different kwargs:
+
+  new                         old (0.4.x)
+  ``jax.shard_map``           ``jax.experimental.shard_map.shard_map``
+  ``check_vma=``              ``check_rep=``
+  ``axis_names={...}``        ``auto=frozenset(all_axes) - {...}``
+  ``jax.make_mesh(axis_types=...)``   (no axis_types kwarg)
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None, check: bool = False):
+    """``jax.shard_map`` with the new-API surface on any supported jax."""
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    # check_rep has no replication rule for several primitives we use
+    # (sharding_constraint) on 0.4.x — always disable there.
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        # partial-auto shard_map is jit-only on the 0.4.x line
+        return jax.jit(_sm(f, **kw))
+    return _sm(f, **kw)
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` (absent on 0.4.x; psum(1) is the classic spelling)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager (``jax.set_mesh`` post-0.5; the Mesh
+    object itself is the context manager before that)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

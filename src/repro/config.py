@@ -123,6 +123,12 @@ class LTPConfig:
     lt_init_rtprop_mult: float = 1.5 # LTThreshold_init = 1.5*RTprop + Size/BtlBw
     deadline_c_ms: float = 30.0      # C: 30ms DCN / 100ms WAN
     compensation: str = "paper"      # paper | count | expected
+    # Phase-aware loss tolerance (beyond-paper, DESIGN.md §3.3): the
+    # effective received-pct threshold ramps linearly from
+    # ``data_pct_threshold`` at training progress 0 to this value at
+    # progress 1 (late training tolerates less gradient loss). None
+    # disables the ramp — the paper's fixed threshold.
+    phase_final_pct_threshold: Optional[float] = None
     error_feedback: bool = False     # beyond-paper
     critical_per_tensor: int = 1     # first/last packet(s) of each tensor marked critical
     seed: int = 0

@@ -8,7 +8,9 @@
 from repro.core.early_close import (  # noqa: F401
     AnalyticIncastModel,
     EarlyCloseController,
+    MultiPSEarlyClose,
     broadcast_time,
+    phase_pct_threshold,
 )
 from repro.core.ltp_sync import LTPSync, make_ltp_sync  # noqa: F401
 from repro.core.packets import PacketPlan, make_plan  # noqa: F401

@@ -14,6 +14,13 @@ Definitions (paper):
   close rule     : t < LT       -> wait for all data
                    LT <= t < DL -> close when received pct >= threshold
                    t >= DL      -> close unconditionally
+
+Beyond-paper extensions (DESIGN.md §3.3, §5):
+  * phase-aware threshold — the received-pct threshold ramps with training
+    progress (``LTPConfig.phase_final_pct_threshold``): early iterations
+    tolerate more loss, late iterations less.
+  * ``MultiPSEarlyClose`` — one independent controller per PS shard; an
+    iteration's close time is the slowest shard's close.
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ class GatherSample:
 
 class AnalyticIncastModel:
     """Fast closed-form stand-in for the DES (calibrated against it —
-    see EXPERIMENTS.md §Paper-validation).
+    compare against ``benchmarks/fig3_incast_fct.py`` output; DESIGN.md §1).
 
     Captures the two phenomena the paper measures:
       * incast long tail (Fig 3): most flows finish near the fair-share
@@ -95,6 +102,18 @@ class AnalyticIncastModel:
         )
 
 
+def phase_pct_threshold(ltp: LTPConfig, progress: float) -> float:
+    """Effective Early-Close received-pct threshold at training progress
+    in [0, 1]. Linear ramp from ``data_pct_threshold`` toward
+    ``phase_final_pct_threshold`` (identity when the latter is None)."""
+    base = ltp.data_pct_threshold
+    final = ltp.phase_final_pct_threshold
+    if final is None:
+        return base
+    p = min(max(float(progress), 0.0), 1.0)
+    return base + (final - base) * p
+
+
 class EarlyCloseController:
     """Maintains LT thresholds + deadline; decides close time & delivered
     fractions each iteration (gathering direction only, §III-B-2)."""
@@ -112,6 +131,15 @@ class EarlyCloseController:
         self.lt = np.full(n_workers, init)          # per-link LT threshold
         self.best_full = np.full(n_workers, np.inf)  # best 100% time this epoch
         self.iter_in_epoch = 0
+        self.progress = 0.0   # training progress in [0,1] (phase-aware ramp)
+
+    def set_progress(self, progress: float) -> None:
+        """Feed training progress for the phase-aware threshold ramp."""
+        self.progress = float(progress)
+
+    @property
+    def pct_threshold(self) -> float:
+        return phase_pct_threshold(self.ltp, self.progress)
 
     @property
     def deadline(self) -> float:
@@ -144,7 +172,7 @@ class EarlyCloseController:
         else:
             # earliest t in [lt, dl] with mean received pct >= threshold;
             # pct is piecewise-linear & monotone -> bisect
-            target = self.ltp.data_pct_threshold
+            target = self.pct_threshold
             if pct(dl).mean() < target:
                 close = dl                    # deadline wins
             elif pct(lt).mean() >= target:
@@ -166,9 +194,57 @@ class EarlyCloseController:
         return close, frac
 
 
-def broadcast_time(net: NetConfig, model_bytes: float) -> float:
-    """Reliable one-to-many broadcast (no Early Close, §III-B-2)."""
+class MultiPSEarlyClose:
+    """Per-shard Early Close for multi-PS deployments (DESIGN.md §5).
+
+    One independent ``EarlyCloseController`` per PS shard, each over
+    ``model_bytes / n_ps``; the iteration's gather BST is the slowest
+    shard's close, and a worker's delivered fraction is the mean over its
+    shard flows. The single-controller interface is preserved so the
+    trainer treats n_ps=1 and n_ps>1 uniformly.
+    """
+
+    def __init__(self, ltp: LTPConfig, net: NetConfig, n_workers: int,
+                 model_bytes: float, n_ps: int = 1):
+        if n_ps < 1:
+            raise ValueError("n_ps must be >= 1")
+        self.n_ps = n_ps
+        self.controllers = [
+            EarlyCloseController(ltp, net, n_workers, model_bytes / n_ps)
+            for _ in range(n_ps)
+        ]
+
+    @property
+    def deadline(self) -> float:
+        return max(c.deadline for c in self.controllers)
+
+    def set_progress(self, progress: float) -> None:
+        for c in self.controllers:
+            c.set_progress(progress)
+
+    def new_epoch(self) -> None:
+        for c in self.controllers:
+            c.new_epoch()
+
+    def step(self, samples: Sequence[GatherSample]) -> Tuple[float, np.ndarray]:
+        """``samples``: one GatherSample per shard. Returns
+        (close = max over shards, delivered frac = mean over shards)."""
+        if len(samples) != self.n_ps:
+            raise ValueError(
+                f"expected {self.n_ps} shard samples, got {len(samples)}")
+        closes, fracs = [], []
+        for c, s in zip(self.controllers, samples):
+            close, frac = c.step(s)
+            closes.append(close)
+            fracs.append(frac)
+        return float(max(closes)), np.mean(fracs, axis=0)
+
+
+def broadcast_time(net: NetConfig, model_bytes: float, n_ps: int = 1) -> float:
+    """Reliable one-to-many broadcast (no Early Close, §III-B-2). With
+    n_ps shards each PS broadcasts its 1/n_ps of the model over its own
+    trunk, in parallel."""
     bw = net.bandwidth_gbps * 1e9 / 8
     rt = net.rtprop_ms * 1e-3
     # PS egress serializes the model once per worker on the shared trunk
-    return rt + model_bytes / bw
+    return rt + model_bytes / n_ps / bw

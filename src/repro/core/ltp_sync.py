@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map as _shard_map
 from repro.config import LTPConfig
 from repro.core import packets as pk
 from repro.models.sharding import dp_axes
@@ -116,20 +118,18 @@ class LTPSync:
         out_res_spec = res_spec
         if res_in is None:
             f = lambda g, fr, k: local(g, fr, k, None)[::2]  # (grads, realized)
-            synced, realized = jax.shard_map(
+            synced, realized = _shard_map(
                 f,
                 mesh=mesh,
                 in_specs=args_specs,
                 out_specs=(self.grad_specs, P()),
-                check_vma=False,
             )(grads, frac, key)
             return synced, None, {"delivered_frac": realized}
-        synced, new_res, realized = jax.shard_map(
+        synced, new_res, realized = _shard_map(
             local,
             mesh=mesh,
             in_specs=args_specs + (res_spec,),
             out_specs=(self.grad_specs, out_res_spec, P()),
-            check_vma=False,
         )(grads, frac, key, res_in)
         return synced, new_res, {"delivered_frac": realized}
 
@@ -195,7 +195,7 @@ def masked_psum_leafwise(grads, key, frac, ltp: LTPConfig, worker_axes,
     """
     widx = jnp.zeros((), jnp.int32)
     for a in worker_axes:
-        widx = widx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        widx = widx * compat.axis_size(a) + jax.lax.axis_index(a)
     k = jax.random.fold_in(key, widx)
     p = ltp.packet_floats
     leaves, treedef = jax.tree_util.tree_flatten(grads)
@@ -243,7 +243,7 @@ def masked_rs_update_leafwise(grads, params, m_states, key, frac,
     """
     widx = jnp.zeros((), jnp.int32)
     for a in worker_axes:
-        widx = widx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        widx = widx * compat.axis_size(a) + jax.lax.axis_index(a)
     k = jax.random.fold_in(key, widx)
     p = ltp.packet_floats
     g_leaves, treedef = jax.tree_util.tree_flatten(grads)

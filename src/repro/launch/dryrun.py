@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import LTPConfig, TrainConfig
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import hlo_analysis
@@ -122,8 +123,8 @@ def build_train(cfg, shape, mesh, *, ltp: bool, zero: bool = False):
         # all-reduces the partitioner emits inside manual shard_map
         # regions (CloneAllReduce/"copy"). The LTP variant therefore
         # lowers with f32 activations on this backend — matmul partial
-        # sums are f32 on real TPUs anyway; byte terms are noted as
-        # f32-inflated in EXPERIMENTS.md §Dry-run.
+        # sums are f32 on real TPUs anyway; byte terms reported by the
+        # dry-run are f32-inflated on this backend accordingly.
         cfg = cfg.replace(dtype="float32")
     api = build(cfg)
     opt = sgd_momentum()
@@ -251,7 +252,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, ltp: bool = False,
             fn, args, specs = build_decode(cfg, shape, mesh)
         shardings = to_named(mesh, specs)
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
         rec["lower_s"] = round(time.time() - t0, 1)
         t0 = time.time()

@@ -15,7 +15,7 @@ int constant in the loop condition), and accumulates:
                     (+ -start forms), x trips — per device, since the
                     module is the per-device SPMD partition
 
-Heuristics (documented in EXPERIMENTS.md §Roofline):
+Heuristics (see benchmarks/README.md, roofline row):
   * `conditional` contributes its most expensive branch;
   * elementwise flops ignored (dot/conv dominate ML steps);
   * bytes is an upper bound on HBM traffic (no inter-op reuse modelling).

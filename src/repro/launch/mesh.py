@@ -15,20 +15,16 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro import compat
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many host devices exist (tests/examples)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro import compat
+    return compat.make_mesh((n_data, n_model), ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline (per chip)

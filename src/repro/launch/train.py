@@ -80,16 +80,16 @@ def main(argv=None) -> int:
 
     # sharded mode
     n_data = args.n_data or jax.device_count()
-    mesh = jax.make_mesh((n_data, jax.device_count() // n_data),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((n_data, jax.device_count() // n_data),
+                            ("data", "model"))
     print(f"mesh: {dict(mesh.shape)}; LTP workers = data axis ({n_data})")
     batch_specs = {"tokens": P("data"), "labels": P("data")}
     step = make_ltp_train_step(api, opt, mesh, ltp, ("data",), batch_specs)
     state = init_state(api, opt, jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
     frac = jnp.ones((n_data,))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for s in range(args.steps):
             b = lm.train_batch(args.batch, args.seq, s)
             b = {k: jnp.asarray(v) for k, v in b.items()}

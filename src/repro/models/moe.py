@@ -127,7 +127,7 @@ def apply_moe(
     scatter/combine gather are shard-local; only the expert einsums touch
     the model axis. (The ungrouped global-sort variant made the
     partitioner replicate expert compute / all-reduce capacity buffers —
-    measured in EXPERIMENTS.md §Perf.)
+    visible in the ``benchmarks/roofline.py`` HLO walk.)
     """
     b, s, d = x.shape
     e, ff = cfg.n_experts, moe_ff(cfg)

@@ -2,12 +2,29 @@
 
 Reproduces the paper's protocol-level experiments at packet granularity:
 Fig 3 (incast FCT long tail), Fig 4 (TCP under non-congestion loss),
-Fig 12/14 (training throughput / BST), Fig 15 (fairness).
+Fig 12/14 (training throughput / BST), Fig 15 (fairness) — plus the
+composable topology engine behind the multi-PS / straggler / cross-traffic
+scenarios (DESIGN.md §5). Run any scenario by name via ``run_scenario``.
 """
-from repro.net.simcore import Sim, Pipe, Packet  # noqa: F401
+from repro.net.simcore import (  # noqa: F401
+    CrossTrafficSource,
+    Packet,
+    Pipe,
+    Route,
+    Sim,
+    Topology,
+)
 from repro.net.scenarios import (  # noqa: F401
-    incast_gather,
-    p2p_transfer,
+    PROTOCOLS,
+    SCENARIOS,
+    GatherSpec,
+    cross_traffic,
     fairness_share,
+    incast_gather,
+    list_scenarios,
+    multi_ps_gather,
+    p2p_transfer,
+    run_scenario,
+    straggler_gather,
     train_iterations,
 )

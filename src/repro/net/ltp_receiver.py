@@ -6,6 +6,12 @@ incast gather at the PS: per-link LT thresholds, one shared deadline, and
 the close rule over the aggregate received percentage + critical-packet
 completeness. On close it broadcasts "stop" to all senders and records,
 per flow, exactly which packets must be bubble-filled.
+
+``ShardedGatherReceiver`` (DESIGN.md §5) is the multi-PS composition: one
+independent ``PSGatherReceiver`` per model shard, each with its own LT
+threshold, deadline timer, and close decision. A worker appears once per
+shard; aggregate statistics reduce over shards (BST = slowest shard's
+close; a worker's delivered fraction = mean over its shard flows).
 """
 from __future__ import annotations
 
@@ -92,8 +98,10 @@ class PSGatherReceiver:
     def __init__(self, sim: Sim, flows: List[int], lt_threshold: float,
                  deadline: float, pct_threshold: float,
                  send_stop: Callable[[int], None],
-                 on_close: Optional[Callable[["PSGatherReceiver"], None]] = None):
+                 on_close: Optional[Callable[["PSGatherReceiver"], None]] = None,
+                 ps_id: int = 0):
         self.sim = sim
+        self.ps_id = ps_id
         self.lt = lt_threshold
         self.deadline = deadline
         self.pct_threshold = pct_threshold
@@ -113,7 +121,13 @@ class PSGatherReceiver:
 
     def on_data(self, pkt: Packet):
         fr = self.flows.get(pkt.flow)
-        if fr is None or self.closed:
+        if fr is None:
+            return
+        if self.closed:
+            # data after close means the flow's "stop" was lost in flight:
+            # re-send it (once per arriving packet, so the retry rate is
+            # bounded by the sender's own transmission rate)
+            self.send_stop(pkt.flow)
             return
         fr.on_data(pkt, self._check)
 
@@ -169,3 +183,64 @@ class PSGatherReceiver:
 
     def bst_gather(self) -> float:
         return (self.close_time or self.sim.now) - self.t0
+
+
+class ShardedGatherReceiver:
+    """Multi-PS gather state: one ``PSGatherReceiver`` per model shard.
+
+    Each shard closes independently (its own LT threshold + deadline);
+    the *iteration* is done when the slowest shard closes. Statistics
+    reduce over shards so the result shapes match the single-PS case:
+    per-worker delivered fraction is the mean over that worker's shard
+    flows, and full time is the max (the worker is only "fully
+    delivered" once every shard has its packets).
+    """
+
+    def __init__(self, sim: Sim, n_ps: int, workers: List[int],
+                 lt_thresholds: List[float], deadlines: List[float],
+                 pct_threshold: float,
+                 send_stop: Callable[[int, int], None]):
+        """``send_stop(ps, worker)`` stops worker's flow toward shard ps."""
+        self.sim = sim
+        self.n_ps = n_ps
+        self.workers = list(workers)
+        self.shards: List[PSGatherReceiver] = [
+            PSGatherReceiver(
+                sim, list(workers), lt_thresholds[p], deadlines[p],
+                pct_threshold,
+                send_stop=lambda w, p=p: send_stop(p, w),
+                ps_id=p,
+            )
+            for p in range(n_ps)
+        ]
+
+    def shard(self, ps: int) -> PSGatherReceiver:
+        return self.shards[ps]
+
+    @property
+    def all_closed(self) -> bool:
+        return all(s.closed for s in self.shards)
+
+    @property
+    def criticals_done(self) -> bool:
+        return all(s.criticals_done for s in self.shards)
+
+    # --- reductions over shards ----------------------------------------------
+    def bst_gather(self) -> float:
+        return max(s.bst_gather() for s in self.shards)
+
+    def delivered_fracs(self) -> np.ndarray:
+        """(W,) mean delivered fraction per worker across shards."""
+        return np.mean([s.delivered_fracs() for s in self.shards], axis=0)
+
+    def full_times(self) -> np.ndarray:
+        """(W,) time at which the worker's *last* shard hit 100%."""
+        return np.max([s.full_times() for s in self.shards], axis=0)
+
+    def per_shard_full_times(self) -> np.ndarray:
+        """(n_ps, W) raw 100%-times — feeds per-PS LT adaptation."""
+        return np.stack([s.full_times() for s in self.shards])
+
+    def payload_packets_received(self) -> int:
+        return sum(len(f.received) for s in self.shards
+                   for f in s.flows.values())

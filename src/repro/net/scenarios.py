@@ -1,10 +1,25 @@
-"""Simulation scenarios mirroring the paper's evaluation setups.
+"""Simulation scenarios mirroring the paper's evaluation setups, plus the
+multi-PS / heterogeneous-worker extensions (DESIGN.md §5).
 
-  p2p_transfer    point-to-point goodput under loss        (Fig 4)
-  incast_gather   W-to-1 gather; FCT tail / BST            (Fig 3, 14)
+Paper scenarios:
+  p2p_transfer     point-to-point goodput under loss        (Fig 4)
+  incast_gather    W-to-1 gather; FCT tail / BST            (Fig 3, 14)
   train_iterations gather+broadcast loop -> BST + delivered fractions
-                  (consumed by the training coupling; Fig 12/13)
-  fairness_share  two flows on one bottleneck              (Fig 15)
+                   (consumed by the training coupling; Fig 12/13)
+  fairness_share   two flows on one bottleneck              (Fig 15)
+
+Topology-engine scenarios (beyond the paper's single shared bottleneck):
+  multi_ps_gather  sharded gather: n_ps parameter-server shards, one pipe
+                   group (trunk) per PS; every worker sends 1/n_ps of the
+                   model to each shard. n_ps=1 IS incast_gather.
+  straggler_gather heterogeneous per-worker access links (rate/delay/loss
+                   multipliers) feeding the shared trunk — bandwidth
+                   stragglers, not just host-jitter start delays.
+  cross_traffic    incast under open-loop background load on the trunk(s).
+
+All gather-style scenarios run through one engine (``_run_gather``) driven
+by a ``GatherSpec``; every scenario is registered in ``SCENARIOS`` and
+runnable via ``run_scenario(name, protocol, net, **kw)``.
 
 All scenarios use scaled transfer sizes (document the scale where used) —
 event counts stay ~O(1e5-1e6) so full sweeps run in seconds on CPU.
@@ -21,20 +36,51 @@ import numpy as np
 
 from repro.config import LTPConfig, NetConfig
 from repro.net import senders as snd
-from repro.net.ltp_receiver import LTPFlowReceiver, PSGatherReceiver
-from repro.net.simcore import Packet, Pipe, Sim
+from repro.net.ltp_receiver import (
+    LTPFlowReceiver,
+    PSGatherReceiver,
+    ShardedGatherReceiver,
+)
+from repro.net.simcore import (
+    CrossTrafficSource,
+    Packet,
+    Pipe,
+    Route,
+    Sim,
+    Topology,
+)
 
 PROTOCOLS = ("ltp", "bbr", "cubic", "reno")
 
+# ----------------------------------------------------------------------------
+# scenario registry
+# ----------------------------------------------------------------------------
 
-def _mk_sender(protocol: str, sim: Sim, pipe: Pipe, deliver, n: int, flow: int,
-               rng, on_done=None, critical=None):
-    if protocol == "ltp":
-        return snd.LTPSender(sim, pipe, deliver, n, critical=critical,
-                             flow=flow, rng=rng, on_done=on_done)
-    cls = {"bbr": snd.BBRSender, "cubic": snd.CubicSender,
-           "reno": snd.RenoSender}[protocol]
-    return cls(sim, pipe, deliver, n, flow=flow, on_done=on_done)
+#: name -> callable(protocol, net, **kwargs). The sweep runner and the
+#: training coupling both dispatch through this table.
+SCENARIOS: Dict[str, Callable] = {}
+
+
+def register_scenario(name: str):
+    def deco(fn):
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def run_scenario(name: str, protocol: str, net: NetConfig, **kwargs):
+    """Dispatch a registered scenario by name."""
+    try:
+        fn = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}"
+        ) from None
+    return fn(protocol, net, **kwargs)
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(SCENARIOS))
 
 
 def _warm(sender, state: Optional[dict]):
@@ -73,6 +119,7 @@ def _npkts(size_bytes: float, protocol: str) -> int:
 # ----------------------------------------------------------------------------
 
 
+@register_scenario("p2p_transfer")
 def p2p_transfer(protocol: str, net: NetConfig, size_bytes: float,
                  seed: int = 0, warm: Optional[dict] = None) -> Dict:
     """One flow over one lossy link. Returns fct/goodput/utilization."""
@@ -94,7 +141,8 @@ def p2p_transfer(protocol: str, net: NetConfig, size_bytes: float,
         recv = LTPFlowReceiver(sim, lambda p: back.send(p, sender.on_ack), 0)
         sender.deliver = lambda p: recv.on_data(p, lambda: None)
     else:
-        sender = _mk_sender(protocol, sim, fwd, None, n, 0, rng, on_done)
+        sender = snd.make_sender(protocol, sim, fwd, None, n, rng=rng,
+                                 on_done=on_done)
         recv = snd.TcpReceiver(sim, lambda p: back.send(p, sender.on_ack), 0)
         sender.deliver = recv.on_data
     _warm(sender, warm)
@@ -123,8 +171,56 @@ def utilization_cached(protocol: str, net: NetConfig, size_bytes: float = 4e6,
 
 
 # ----------------------------------------------------------------------------
-# incast gather
+# the gather engine (single-PS incast is the n_ps=1 special case)
 # ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GatherSpec:
+    """Topology description for one gather scenario (DESIGN.md §5).
+
+    The default spec is the paper's setup: one PS behind one shared
+    bottleneck, homogeneous workers, no background load. Every field
+    composes with every other.
+    """
+
+    n_ps: int = 1
+    # per-worker access-link heterogeneity; None -> workers attach to the
+    # trunk directly (no extra hop), exactly the paper topology.
+    worker_rate_mult: Optional[np.ndarray] = None   # (W,) x trunk rate
+    worker_delay_ms: Optional[np.ndarray] = None    # (W,) extra one-way ms
+    worker_loss: Optional[np.ndarray] = None        # (W,) access loss prob
+    # open-loop background load per PS trunk, as a fraction of line rate
+    # offered during ON bursts (see CrossTrafficSource).
+    cross_traffic_load: float = 0.0
+    cross_on_ms: float = 5.0
+    cross_off_ms: float = 5.0
+
+    @property
+    def heterogeneous(self) -> bool:
+        return (self.worker_rate_mult is not None
+                or self.worker_delay_ms is not None
+                or self.worker_loss is not None)
+
+    def access_params(self, f: int, net: NetConfig) -> Tuple[float, float, float]:
+        """(rate_bps, one-way delay s, loss) of worker f's access link."""
+        bw = net.bandwidth_gbps * 1e9
+        rate = bw * (self.worker_rate_mult[f]
+                     if self.worker_rate_mult is not None else 1.0)
+        delay = (self.worker_delay_ms[f] * 1e-3
+                 if self.worker_delay_ms is not None else 0.0)
+        loss = (float(self.worker_loss[f])
+                if self.worker_loss is not None else 0.0)
+        return rate, delay, loss
+
+    def worker_share_bps(self, f: int, w: int, net: NetConfig) -> float:
+        """Worker f's attainable per-shard rate: min(trunk fair share,
+        its access-link share across the n_ps concurrent shard flows)."""
+        bw = net.bandwidth_gbps * 1e9
+        share = bw / w
+        if self.worker_rate_mult is not None:
+            share = min(share, bw * self.worker_rate_mult[f] / self.n_ps)
+        return share
 
 
 @dataclasses.dataclass
@@ -134,109 +230,215 @@ class GatherResult:
     delivered: np.ndarray         # (W,) fraction delivered at close
     full_times: np.ndarray        # (W,) time to 100% (inf if early-closed)
     criticals_ok: bool
+    per_ps_full: Optional[np.ndarray] = None   # (n_ps, W) per-shard 100% times
+    packets_received: int = 0                  # payload packets at receiver(s)
+    packets_expected: int = 0                  # n_ps * W * pkts-per-shard
+    trunk_stats: Optional[Dict] = None         # Topology.stats() of the trunks
+
+
+def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
+                    rng: np.random.Generator,
+                    ) -> Tuple[Topology, List[CrossTrafficSource]]:
+    """PS trunks (one pipe group per shard) + optional worker access links
+    + optional cross-traffic sources. Forward routes come from
+    ``_fwd_path``; ack/return paths are built per flow by the caller."""
+    bw = net.bandwidth_gbps * 1e9
+    topo = Topology(sim)
+    half_rtt = net.rtprop_ms * 1e-3 / 2
+    for p in range(spec.n_ps):
+        topo.add_pipe(f"ps{p}/trunk",
+                      Pipe(sim, bw, half_rtt, net.loss_rate,
+                           net.queue_pkts, rng),
+                      group=f"ps{p}")
+    if spec.heterogeneous:
+        for f in range(w):
+            rate, delay, loss = spec.access_params(f, net)
+            topo.add_pipe(f"w{f}/up",
+                          Pipe(sim, rate, delay, loss, net.queue_pkts, rng),
+                          group="access")
+    sources: List[CrossTrafficSource] = []
+    if spec.cross_traffic_load > 0:
+        for p in range(spec.n_ps):
+            src = CrossTrafficSource(
+                sim, topo.pipes[f"ps{p}/trunk"], spec.cross_traffic_load,
+                rng=rng, on_mean=spec.cross_on_ms * 1e-3,
+                off_mean=spec.cross_off_ms * 1e-3)
+            sources.append(src)
+            src.start()
+    return topo, sources
+
+
+def _fwd_path(topo: Topology, spec: GatherSpec, p: int, f: int):
+    """Worker f's forward path to PS shard p."""
+    if spec.heterogeneous:
+        return topo.route(f"w{f}/up", f"ps{p}/trunk")
+    return topo.pipes[f"ps{p}/trunk"]
 
 
 def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
-                rng: np.random.Generator, warm: List[Optional[dict]],
-                lt: float, deadline: float, pct_thresh: float,
+                rng: np.random.Generator,
+                warm: Optional[List[List[Optional[dict]]]],
+                lt: np.ndarray, deadline: np.ndarray, pct_thresh: float,
                 critical_frac: float = 0.01,
                 start_delays: Optional[np.ndarray] = None,
-                ) -> Tuple[GatherResult, List[dict]]:
-    """One gather round. Returns (result, warm_states).
+                spec: Optional[GatherSpec] = None,
+                ) -> Tuple[GatherResult, List[List[dict]]]:
+    """One gather round over the topology in ``spec``.
 
-    ``start_delays``: per-flow start offsets modelling host-side stragglers
-    (GC pauses, CPU contention, slow gradient production) — the source of
-    the paper's Fig-3 "starved flows" beyond pure protocol dynamics."""
+    Returns (result, warm_states[n_ps][w]). ``size_bytes`` is the FULL
+    model size; each of the n_ps shards carries size_bytes/n_ps.
+    ``lt``/``deadline`` are per-shard (n_ps,) thresholds.
+
+    ``start_delays``: per-worker start offsets modelling host-side
+    stragglers (GC pauses, CPU contention, slow gradient production) —
+    the source of the paper's Fig-3 "starved flows" beyond pure protocol
+    dynamics. A worker's delay applies to all of its shard flows.
+    """
+    spec = spec or GatherSpec()
+    n_ps = spec.n_ps
     sim = Sim()
     bw = net.bandwidth_gbps * 1e9
-    bottleneck = Pipe(sim, bw, net.rtprop_ms * 1e-3 / 2, net.loss_rate,
-                      net.queue_pkts, rng)
-    n = _npkts(size_bytes, protocol)
-    senders = []
+    topo, sources = _build_topology(sim, net, w, spec, rng)
+    n = _npkts(size_bytes / n_ps, protocol)   # packets per shard flow
+    senders: Dict[Tuple[int, int], object] = {}
+    half_rtt = net.rtprop_ms * 1e-3 / 2
+
+    def stop_sources():
+        for src in sources:
+            src.stop()
+
+    # safeguard: background load dies out well past the slowest deadline so
+    # a pathological round cannot spin the event loop for simulated hours
+    if sources:
+        d_max = (float(np.max(start_delays)) if start_delays is not None
+                 else 0.0)
+        sim.at(d_max + 10.0 * float(np.max(deadline)) + 1e-3, stop_sources)
+
     if protocol == "ltp":
         crit = np.zeros(n, bool)
         ncrit = max(2, int(critical_frac * n))
         crit[: ncrit // 2] = True
         crit[-(ncrit - ncrit // 2):] = True
-        ps = PSGatherReceiver(sim, list(range(w)), lt, deadline, pct_thresh,
-                              send_stop=lambda f: None)
-        stops = {}
+        stops: Dict[Tuple[int, int], Callable[[], None]] = {}
 
-        def send_stop(f):
-            stops[f]()
-        ps.send_stop = send_stop
-        for f in range(w):
-            back = Pipe(sim, bw, net.rtprop_ms * 1e-3 / 2, net.loss_rate,
-                        10_000, rng)
-            s = snd.LTPSender(sim, bottleneck, ps.on_data, n, critical=crit,
-                              flow=f, rng=rng)
-            ps.attach_ack(f, lambda p, s=s, back=back: back.send(p, s.on_ack))
-            stops[f] = (lambda s=s, back=back: back.send(
-                Packet(s.flow, -2, 41, kind="stop"), s.on_ack))
-            _warm(s, warm[f] if warm else None)
-            senders.append(s)
-        for f, s in enumerate(senders):
+        def send_stop(p, f):
+            stops[(p, f)]()
+
+        sharded = ShardedGatherReceiver(
+            sim, n_ps, list(range(w)), [float(x) for x in lt],
+            [float(x) for x in deadline], pct_thresh, send_stop)
+        n_done = [0]
+
+        def flow_stopped():
+            n_done[0] += 1
+            if n_done[0] >= n_ps * w:
+                stop_sources()
+
+        for p in range(n_ps):
+            shard = sharded.shard(p)
+            for f in range(w):
+                back = Pipe(sim, bw, half_rtt, net.loss_rate, 10_000, rng)
+                s = snd.LTPSender(sim, _fwd_path(topo, spec, p, f),
+                                  shard.on_data, n, critical=crit,
+                                  flow=f, rng=rng,
+                                  on_done=lambda s: flow_stopped())
+                shard.attach_ack(f, lambda pkt, s=s, back=back:
+                                 back.send(pkt, s.on_ack))
+                stops[(p, f)] = (lambda s=s, back=back: back.send(
+                    Packet(s.flow, -2, 41, kind="stop"), s.on_ack))
+                _warm(s, warm[p][f] if warm else None)
+                senders[(p, f)] = s
+        for (p, f), s in senders.items():
             d = float(start_delays[f]) if start_delays is not None else 0.0
             sim.at(d, s.start)
         sim.run(until=3600.0)
         res = GatherResult(
-            bst_gather=ps.bst_gather(),
-            fcts=np.minimum(ps.full_times(), ps.bst_gather()),
-            delivered=ps.delivered_fracs(),
-            full_times=ps.full_times(),
-            criticals_ok=ps.criticals_done,
+            bst_gather=sharded.bst_gather(),
+            fcts=np.minimum(sharded.full_times(), sharded.bst_gather()),
+            delivered=sharded.delivered_fracs(),
+            full_times=sharded.full_times(),
+            criticals_ok=sharded.criticals_done,
+            per_ps_full=sharded.per_shard_full_times(),
+            packets_received=sharded.payload_packets_received(),
+            packets_expected=n_ps * w * n,
+            trunk_stats=topo.stats(),
         )
-        return res, [_save_warm(s) for s in senders]
+        return res, [[_save_warm(senders[(p, f)]) for f in range(w)]
+                     for p in range(n_ps)]
 
     # order-preserving protocols: reliable, BST = max FCT
-    fcts = np.full(w, np.inf)
+    fcts = np.full((n_ps, w), np.inf)
     receivers = []
-    for f in range(w):
-        back = Pipe(sim, bw, net.rtprop_ms * 1e-3 / 2, net.loss_rate,
-                    10_000, rng)
-        def on_done(s, f=f):
-            fcts[f] = sim.now
-        s = _mk_sender(protocol, sim, bottleneck, None, n, f, rng, on_done)
-        r = snd.TcpReceiver(sim, lambda p, s=s, back=back: back.send(p, s.on_ack), f)
-        s.deliver = r.on_data
-        # registration so the receiver knows flow length
-        _warm(s, warm[f] if warm else None)
-        senders.append(s)
-        receivers.append(r)
-    for f, (s, r) in enumerate(zip(senders, receivers)):
+    n_done = [0]
+    for p in range(n_ps):
+        for f in range(w):
+            back = Pipe(sim, bw, half_rtt, net.loss_rate, 10_000, rng)
+
+            def on_done(s, p=p, f=f):
+                fcts[p, f] = sim.now
+                n_done[0] += 1
+                if n_done[0] >= n_ps * w:
+                    stop_sources()
+
+            s = snd.make_sender(protocol, sim, _fwd_path(topo, spec, p, f),
+                                None, n, flow=f, rng=rng, on_done=on_done)
+            r = snd.TcpReceiver(
+                sim, lambda pkt, s=s, back=back: back.send(pkt, s.on_ack), f)
+            s.deliver = r.on_data
+            # registration so the receiver knows flow length
+            _warm(s, warm[p][f] if warm else None)
+            senders[(p, f)] = s
+            receivers.append(r)
+    for r in receivers:
         r.n_total = n
+    for (p, f), s in senders.items():
         d = float(start_delays[f]) if start_delays is not None else 0.0
         sim.at(d, s.start)
     sim.run(until=3600.0)
+    fin = np.where(np.isfinite(fcts), fcts, sim.now)
+    per_worker = fin.max(axis=0)
     res = GatherResult(
-        bst_gather=float(np.max(np.where(np.isfinite(fcts), fcts, sim.now))),
-        fcts=np.where(np.isfinite(fcts), fcts, sim.now),
+        bst_gather=float(per_worker.max()),
+        fcts=per_worker,
         delivered=np.ones(w),
-        full_times=fcts,
+        full_times=fcts.max(axis=0),
         criticals_ok=True,
+        per_ps_full=fcts,
+        packets_received=sum(len(r.received) for r in receivers),
+        packets_expected=n_ps * w * n,
+        trunk_stats=topo.stats(),
     )
-    return res, [_save_warm(s) for s in senders]
+    return res, [[_save_warm(senders[(p, f)]) for f in range(w)]
+                 for p in range(n_ps)]
 
 
-def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
-                  iters: int = 10, ltp: Optional[LTPConfig] = None,
-                  seed: int = 0, straggler_prob: float = 0.15,
-                  straggler_scale: float = 0.6) -> List[GatherResult]:
-    """Repeated gather rounds with Early Close threshold adaptation.
+def _iterate_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                    iters: int, ltp: Optional[LTPConfig], seed: int,
+                    straggler_prob: float, straggler_scale: float,
+                    spec: Optional[GatherSpec] = None) -> List[GatherResult]:
+    """Repeated gather rounds with per-(shard, link) Early Close adaptation.
 
-    Stragglers: with prob ``straggler_prob`` a worker starts its flow late
-    by Exp(straggler_scale * ECT) — host-side jitter (the paper's Fig-3
-    "starved flows"). Set straggler_prob=0 for a pure-protocol incast.
+    Host-jitter stragglers: with prob ``straggler_prob`` a worker starts
+    its flows late by Exp(straggler_scale * ECT) (the paper's Fig-3
+    "starved flows"). Bandwidth stragglers come from ``spec``.
     """
     ltp = ltp or LTPConfig()
+    spec = spec or GatherSpec()
+    n_ps = spec.n_ps
     rng = np.random.default_rng(seed)
-    bw_share = net.bandwidth_gbps * 1e9 / 8.0 / w
+    shard_bytes = size_bytes / n_ps
     rt = net.rtprop_ms * 1e-3
-    ect = rt + size_bytes / bw_share
-    lt = np.full(w, ltp.lt_init_rtprop_mult * rt + size_bytes / bw_share)
+    bw_share = net.bandwidth_gbps * 1e9 / 8.0 / w
+    ect = rt + shard_bytes / bw_share
+    # per-(shard, link) LT init: the paper's formula with each link's own
+    # attainable share (slow access links start with larger thresholds)
+    lt = np.empty((n_ps, w))
+    for f in range(w):
+        share = spec.worker_share_bps(f, w, net) / 8.0   # bytes/s
+        lt[:, f] = ltp.lt_init_rtprop_mult * rt + shard_bytes / share
     results: List[GatherResult] = []
-    warm: List[Optional[dict]] = [None] * w
-    best_full = np.full(w, np.inf)
+    warm: Optional[List[List[Optional[dict]]]] = None
+    best_full = np.full((n_ps, w), np.inf)
     iters_per_epoch = max(1, iters // 3)
     for i in range(iters):
         delays = np.where(
@@ -244,14 +446,16 @@ def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
             rng.exponential(straggler_scale * ect, w),
             0.0,
         )
-        deadline = float(lt.max()) + ltp.deadline_c_ms * 1e-3
+        deadline = lt.max(axis=1) + ltp.deadline_c_ms * 1e-3   # (n_ps,)
         res, warm = _run_gather(protocol, net, w, size_bytes, rng, warm,
-                                float(lt.max()), deadline,
+                                lt.max(axis=1), deadline,
                                 ltp.data_pct_threshold,
-                                start_delays=delays)
+                                start_delays=delays, spec=spec)
         results.append(res)
-        ok = np.isfinite(res.full_times)
-        best_full[ok] = np.minimum(best_full[ok], res.full_times[ok])
+        pfull = res.per_ps_full if res.per_ps_full is not None else \
+            res.full_times[None, :]
+        ok = np.isfinite(pfull)
+        best_full[ok] = np.minimum(best_full[ok], pfull[ok])
         if (i + 1) % iters_per_epoch == 0:   # epoch boundary: update LT
             upd = np.isfinite(best_full)
             lt[upd] = best_full[upd]
@@ -259,13 +463,87 @@ def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                 # some link never reached 100% (early-closed every round):
                 # re-apply the paper's ECT formula with the *measured*
                 # per-link BtlBw (repro extension, cf. paper §VI-B)
-                for f in np.flatnonzero(~upd):
-                    btlbw = (warm[f] or {}).get("btlbw", 0.0) / 8.0  # bytes/s
+                for p, f in zip(*np.nonzero(~upd)):
+                    btlbw = (warm[p][f] or {}).get("btlbw", 0.0) / 8.0
                     if btlbw > 0:
-                        lt[f] = (ltp.lt_init_rtprop_mult * rt
-                                 + size_bytes / btlbw)
+                        lt[p, f] = (ltp.lt_init_rtprop_mult * rt
+                                    + shard_bytes / btlbw)
             best_full[:] = np.inf
     return results
+
+
+# ----------------------------------------------------------------------------
+# registered gather scenarios
+# ----------------------------------------------------------------------------
+
+
+@register_scenario("incast_gather")
+def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                  iters: int = 10, ltp: Optional[LTPConfig] = None,
+                  seed: int = 0, straggler_prob: float = 0.15,
+                  straggler_scale: float = 0.6) -> List[GatherResult]:
+    """The paper's W-to-1 incast gather with Early Close adaptation —
+    the n_ps=1 homogeneous case of the gather engine."""
+    return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
+                           straggler_prob, straggler_scale, GatherSpec())
+
+
+@register_scenario("multi_ps_gather")
+def multi_ps_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                    n_ps: int = 2, iters: int = 10,
+                    ltp: Optional[LTPConfig] = None, seed: int = 0,
+                    straggler_prob: float = 0.15,
+                    straggler_scale: float = 0.6) -> List[GatherResult]:
+    """Sharded gather over n_ps parameter-server shards (DESIGN.md §5).
+
+    The model splits evenly: each worker sends size/n_ps to every shard,
+    each shard sits behind its own trunk (pipe group) and runs its own
+    Early Close state. By construction n_ps=1 is ``incast_gather``.
+    """
+    return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
+                           straggler_prob, straggler_scale,
+                           GatherSpec(n_ps=n_ps))
+
+
+@register_scenario("straggler_gather")
+def straggler_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                     iters: int = 6, ltp: Optional[LTPConfig] = None,
+                     seed: int = 0, n_slow: int = 0,
+                     slow_rate_mult: float = 0.25,
+                     slow_delay_ms: float = 0.0,
+                     n_ps: int = 1) -> List[GatherResult]:
+    """Bandwidth stragglers: the last ``n_slow`` workers (default w//4,
+    at least 1) attach through access links at ``slow_rate_mult`` x the
+    trunk rate (+ optional extra delay). Early-Close LT thresholds adapt
+    per link, so LTP closes around the stragglers while order-preserving
+    protocols wait for their last byte.
+    """
+    n_slow = n_slow or max(1, w // 4)
+    mult = np.ones(w)
+    mult[w - n_slow:] = slow_rate_mult
+    delay = np.zeros(w)
+    delay[w - n_slow:] = slow_delay_ms
+    spec = GatherSpec(n_ps=n_ps, worker_rate_mult=mult,
+                      worker_delay_ms=delay if slow_delay_ms else None)
+    return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
+                           0.0, 0.0, spec)
+
+
+@register_scenario("cross_traffic")
+def cross_traffic(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                  iters: int = 6, ltp: Optional[LTPConfig] = None,
+                  seed: int = 0, bg_load: float = 0.5,
+                  on_ms: float = 5.0, off_ms: float = 5.0,
+                  n_ps: int = 1) -> List[GatherResult]:
+    """Incast gather competing with open-loop background traffic on the
+    trunk(s): other tenants' flows crossing the same ToR egress. The
+    background load is never ACKed or retransmitted (pure interference);
+    ``bg_load`` is the offered fraction of line rate during ON bursts.
+    """
+    spec = GatherSpec(n_ps=n_ps, cross_traffic_load=bg_load,
+                      cross_on_ms=on_ms, cross_off_ms=off_ms)
+    return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
+                           0.0, 0.0, spec)
 
 
 # ----------------------------------------------------------------------------
@@ -273,18 +551,41 @@ def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
 # ----------------------------------------------------------------------------
 
 
+@register_scenario("train_iterations")
 def train_iterations(protocol: str, net: NetConfig, w: int, model_bytes: float,
                      iters: int = 10, ltp: Optional[LTPConfig] = None,
-                     seed: int = 0, scale: float = 1.0) -> Dict:
+                     seed: int = 0, scale: float = 1.0,
+                     scenario: str = "incast_gather", n_ps: int = 1,
+                     **scenario_kw) -> Dict:
     """Gather (simulated, possibly Early-Closed) + broadcast (reliable,
     one-to-many — modeled via measured p2p utilization since it has no
     incast contention). ``scale`` < 1 simulates a scaled-down model size
-    and rescales times back up (documented wherever used)."""
+    and rescales times back up (documented wherever used).
+
+    ``scenario`` picks any registered gather scenario for the gathering
+    leg (``multi_ps_gather``, ``straggler_gather``, ``cross_traffic``);
+    extra kwargs pass through. ``n_ps`` governs BOTH legs: it is
+    forwarded to scenarios that shard (so gather and broadcast always
+    agree), and with n_ps shards the broadcast parallelizes — each PS
+    broadcasts its 1/n_ps of the model over its own trunk.
+    """
+    import inspect
     size = model_bytes * scale
-    gs = incast_gather(protocol, net, w, size, iters, ltp, seed)
+    fn = SCENARIOS[scenario]
+    if "n_ps" in inspect.signature(fn).parameters:
+        scenario_kw.setdefault("n_ps", n_ps)
+    elif n_ps != 1:
+        raise ValueError(
+            f"scenario {scenario!r} does not take n_ps; use "
+            f"scenario='multi_ps_gather' (or another sharding scenario) "
+            f"for n_ps={n_ps}")
+    n_ps = int(scenario_kw.get("n_ps", 1))
+    gs = run_scenario(scenario, protocol, net, w=w, size_bytes=size,
+                      iters=iters, ltp=ltp, seed=seed, **scenario_kw)
     util = utilization_cached(protocol, net, size_bytes=max(4e6, w * size))
     bcast = (net.rtprop_ms * 1e-3
-             + w * size / (net.bandwidth_gbps * 1e9 / 8.0 * max(util, 1e-3)))
+             + w * size / n_ps
+             / (net.bandwidth_gbps * 1e9 / 8.0 * max(util, 1e-3)))
     bst = np.array([g.bst_gather + bcast for g in gs]) / scale
     delivered = np.stack([g.delivered for g in gs])
     return {
@@ -324,7 +625,8 @@ def fairness_share(proto_a: str, proto_b: str, net: NetConfig,
                 r.on_data(p, lambda: None)
             s.deliver = deliver
         else:
-            s = _mk_sender(proto, sim, bottleneck, None, n, f, rng)
+            s = snd.make_sender(proto, sim, bottleneck, None, n, flow=f,
+                                rng=rng)
             r = snd.TcpReceiver(sim, lambda p, s=s, back=back: back.send(p, s.on_ack), f)
             def deliver(p, r=r, f=f):
                 if p.kind == "data":
@@ -339,3 +641,9 @@ def fairness_share(proto_a: str, proto_b: str, net: NetConfig,
     if tot == 0:
         return 0.5, 0.5
     return delivered[0] / tot, delivered[1] / tot
+
+
+# registry adapter: the competing protocol rides in as a kwarg
+SCENARIOS["fairness_share"] = (
+    lambda protocol, net, proto_b="cubic", **kw:
+        fairness_share(protocol, proto_b, net, **kw))

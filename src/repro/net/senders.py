@@ -22,6 +22,38 @@ LTP_PAYLOAD = 1435  # 1500 - 28 (UDP/IP) - 9 (LTP header) ≈ paper §IV-A
 LTP_OVERHEAD = 37
 
 
+#: protocol name -> sender class; scenario code goes through ``make_sender``
+#: so new congestion controllers plug in without touching the scenarios.
+SENDER_REGISTRY: Dict[str, type] = {}
+
+
+def register_sender(name: str):
+    def deco(cls):
+        SENDER_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_sender(protocol: str, sim: "Sim", pipe, deliver, n_packets: int, *,
+                flow: int = 0, rng=None, on_done=None, critical=None):
+    """Uniform sender construction over every registered protocol.
+
+    ``pipe`` is anything with ``send(pkt, deliver)`` — a ``Pipe`` or a
+    multi-hop ``Route``. LTP-specific knobs (``critical``, ``rng``) are
+    ignored by the TCP family.
+    """
+    try:
+        cls = SENDER_REGISTRY[protocol]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {protocol!r}; registered: "
+            f"{sorted(SENDER_REGISTRY)}") from None
+    if issubclass(cls, LTPSender):
+        return cls(sim, pipe, deliver, n_packets, critical=critical,
+                   flow=flow, rng=rng, on_done=on_done)
+    return cls(sim, pipe, deliver, n_packets, flow=flow, on_done=on_done)
+
+
 class RateEstimator:
     """BBR-style windowed max(delivery rate) + min(rtt)."""
 
@@ -286,10 +318,12 @@ class _TcpBase:
         self._pump()
 
 
+@register_sender("reno")
 class RenoSender(_TcpBase):
     pass
 
 
+@register_sender("cubic")
 class CubicSender(_TcpBase):
     C = 0.4
     BETA = 0.7
@@ -320,6 +354,7 @@ class CubicSender(_TcpBase):
             self.cwnd += 0.01 * newly
 
 
+@register_sender("bbr")
 class BBRSender(_TcpBase):
     """Paced BDP sender; loss does not cut the rate (reliable via retx)."""
 
@@ -408,6 +443,7 @@ class BBRSender(_TcpBase):
 # ============================================================================
 
 
+@register_sender("ltp")
 class LTPSender:
     """Out-of-order sender with CQ/NQ/RQ queues and BDP-based CC."""
 

@@ -1,4 +1,5 @@
-"""Discrete-event core: event loop + lossy serialized pipes.
+"""Discrete-event core: event loop, lossy serialized pipes, and the
+composable topology layer (DESIGN.md §5).
 
 A ``Pipe`` models one direction of a link: store-and-forward serialization
 at ``rate_bps``, a droptail queue (in packets) at its ingress, i.i.d.
@@ -6,13 +7,24 @@ non-congestion random loss, and fixed propagation delay. The incast
 scenarios attach many senders to one shared bottleneck pipe — the ToR's
 egress port toward the PS — which is where the paper's long-tail latency
 is born.
+
+Beyond the single shared bottleneck, three composable pieces build
+arbitrary gather topologies:
+
+  ``Route``              chains pipes hop-by-hop (worker NIC -> ToR ->
+                         PS port); a drop at any hop kills the packet.
+  ``Topology``           named-pipe registry with per-group aggregate
+                         stats — one *pipe group* per PS shard.
+  ``CrossTrafficSource`` open-loop on/off background load injected at a
+                         pipe's ingress, stealing serialization slots
+                         from the senders under test.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -113,3 +125,148 @@ class Pipe:
 
         self.sim.at(arrive, _deliver)
         return True
+
+
+class Route:
+    """A chain of pipes traversed in order (store-and-forward per hop).
+
+    Senders only require an object with ``send(pkt, deliver)``, so a
+    ``Route`` substitutes for a ``Pipe`` anywhere: the packet re-enqueues
+    at each hop's droptail queue, pays each hop's serialization + delay,
+    and dies silently if any hop drops it. A one-pipe route behaves
+    identically to using the pipe directly.
+    """
+
+    def __init__(self, pipes: Sequence[Pipe]):
+        if not pipes:
+            raise ValueError("Route needs at least one pipe")
+        self.pipes = list(pipes)
+
+    def send(self, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
+        return self._hop(0, pkt, deliver)
+
+    def _hop(self, i: int, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
+        if i == len(self.pipes) - 1:
+            return self.pipes[i].send(pkt, deliver)
+        return self.pipes[i].send(
+            pkt, lambda p, i=i: self._hop(i + 1, p, deliver)
+        )
+
+    # aggregate counters over hops (drop-anywhere semantics)
+    @property
+    def n_dropped_queue(self) -> int:
+        return sum(p.n_dropped_queue for p in self.pipes)
+
+    @property
+    def n_dropped_loss(self) -> int:
+        return sum(p.n_dropped_loss for p in self.pipes)
+
+
+class Topology:
+    """Named-pipe registry grouping links into *pipe groups* (one per PS
+    shard in the multi-PS scenarios). Purely bookkeeping: construction
+    helpers + aggregate statistics; the event loop stays in ``Sim``.
+    """
+
+    def __init__(self, sim: Sim):
+        self.sim = sim
+        self.pipes: Dict[str, Pipe] = {}
+        self.groups: Dict[str, List[str]] = {}
+
+    def add_pipe(self, name: str, pipe: Pipe, group: Optional[str] = None) -> Pipe:
+        if name in self.pipes:
+            raise ValueError(f"duplicate pipe name {name!r}")
+        self.pipes[name] = pipe
+        if group is not None:
+            self.groups.setdefault(group, []).append(name)
+        return pipe
+
+    def route(self, *names: str) -> Route:
+        return Route([self.pipes[n] for n in names])
+
+    def group_pipes(self, group: str) -> List[Pipe]:
+        return [self.pipes[n] for n in self.groups.get(group, [])]
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-group totals: sent/dropped/delivered-bytes."""
+        out: Dict[str, Dict[str, float]] = {}
+        for group, names in self.groups.items():
+            ps = [self.pipes[n] for n in names]
+            out[group] = {
+                "n_sent": sum(p.n_sent for p in ps),
+                "n_dropped_queue": sum(p.n_dropped_queue for p in ps),
+                "n_dropped_loss": sum(p.n_dropped_loss for p in ps),
+                "bytes_delivered": sum(p.bytes_delivered for p in ps),
+            }
+        return out
+
+
+class CrossTrafficSource:
+    """Open-loop background traffic on one pipe (bursty on/off).
+
+    During ON periods, MTU-sized packets are injected at ``load`` × the
+    pipe's line rate (so ``load`` is the long-run offered fraction of
+    capacity while ON). ON/OFF durations are exponential with the given
+    means, modelling other tenants' flows crossing the ToR — the traffic
+    competes for the same serializer and droptail queue as the gather
+    flows but is never ACKed or retransmitted.
+    """
+
+    FLOW_ID = -1  # cross-traffic packets carry flow == -1
+
+    def __init__(self, sim: Sim, pipe: Pipe, load: float,
+                 rng: Optional[np.random.Generator] = None,
+                 pkt_bytes: int = 1500,
+                 on_mean: float = 10e-3, off_mean: float = 10e-3,
+                 duty: Optional[float] = None):
+        self.sim = sim
+        self.pipe = pipe
+        self.load = float(load)
+        self.rng = rng or np.random.default_rng(0)
+        self.pkt_bytes = pkt_bytes
+        self.on_mean = on_mean
+        if duty is not None:
+            # explicit duty cycle: derive the OFF mean from it
+            self.duty = float(duty)
+            self.off_mean = on_mean * (1.0 - self.duty) / max(self.duty, 1e-9)
+        else:
+            self.off_mean = off_mean
+            self.duty = on_mean / (on_mean + off_mean)
+        self.n_injected = 0
+        self.n_delivered = 0
+        self._seq = 0
+        self._stopped = False
+
+    @property
+    def offered_bps(self) -> float:
+        """Long-run average offered load in bits/s."""
+        return self.load * self.duty * self.pipe.rate
+
+    def start(self) -> None:
+        self._burst()
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    def _burst(self) -> None:
+        if self._stopped or self.load <= 0:
+            return
+        on = self.rng.exponential(self.on_mean)
+        gap = self.pkt_bytes * 8.0 / (self.load * self.pipe.rate)
+        n = max(1, int(on / gap))
+        for i in range(n):
+            self.sim.after(i * gap, self._inject)
+        off = self.rng.exponential(self.off_mean)
+        self.sim.after(on + off, self._burst)
+
+    def _inject(self) -> None:
+        if self._stopped:
+            return
+        self._seq += 1
+        self.n_injected += 1
+        pkt = Packet(self.FLOW_ID, self._seq, self.pkt_bytes, kind="data",
+                     meta={"cross": True})
+        self.pipe.send(pkt, self._sink)
+
+    def _sink(self, pkt: Packet) -> None:
+        self.n_delivered += 1

@@ -15,7 +15,16 @@ transport layer is pluggable:
 Wall-clock per iteration = compute_time + BST, which is how throughput
 (Fig 12), TTA (Fig 13) and BST (Fig 14) are all derived from one loop.
 Transport timing backend: AnalyticIncastModel (fast) or precomputed DES
-samples (pass ``bst_trace``).
+samples (pass ``bst_trace`` — e.g. from any registered net scenario via
+``repro.net.scenarios.train_iterations``).
+
+Multi-PS (DESIGN.md §5): with ``n_ps > 1`` the model shards over n_ps
+parameter servers, each behind its own trunk; Early Close runs one
+controller per shard (``MultiPSEarlyClose``) and the iteration closes
+when the slowest shard closes. Phase-aware loss tolerance (§3.3): when
+``LTPConfig.phase_final_pct_threshold`` is set, controllers receive the
+training progress each step and tighten the received-pct threshold as
+training converges.
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ from repro.config import LTPConfig, NetConfig, TrainConfig
 from repro.core import packets as pk
 from repro.core.early_close import (
     AnalyticIncastModel,
-    EarlyCloseController,
+    MultiPSEarlyClose,
     broadcast_time,
 )
 from repro.models.api import ModelApi
@@ -57,6 +66,7 @@ class PSTrainer:
         bst_trace: Optional[np.ndarray] = None,
         delivered_trace: Optional[np.ndarray] = None,
         seed: int = 0,
+        n_ps: int = 1,
     ):
         self.api = api
         self.opt = opt
@@ -79,10 +89,15 @@ class PSTrainer:
             if ltp.error_feedback else None
         )
         self.model_bytes = self.plan.n_floats * 4
-        self.controller = EarlyCloseController(ltp, net, n_workers, self.model_bytes)
-        self.gather_model = AnalyticIncastModel(
-            net, n_workers, protocol=protocol, seed=seed + 1
-        )
+        self.n_ps = n_ps
+        self.controller = MultiPSEarlyClose(ltp, net, n_workers,
+                                            self.model_bytes, n_ps=n_ps)
+        # one analytic incast per PS shard (independent tail draws)
+        self.gather_models = [
+            AnalyticIncastModel(net, n_workers, protocol=protocol,
+                                seed=seed + 1 + 1000 * p)
+            for p in range(n_ps)
+        ]
         self.sim_time = 0.0
         self.step_idx = 0
         self.history: List[Dict] = []
@@ -139,14 +154,21 @@ class PSTrainer:
             if self.delivered_trace is not None:
                 return bst, np.asarray(self.delivered_trace[it % len(self.delivered_trace)])
             return bst, np.ones(self.w)
-        sample = self.gather_model.sample(self.model_bytes)
+        shard_bytes = self.model_bytes / self.n_ps
+        samples = [m.sample(shard_bytes) for m in self.gather_models]
         if self.protocol == "ltp":
-            close, frac = self.controller.step(sample)
-            bst = close + broadcast_time(self.net, self.model_bytes)
+            # phase-aware threshold: feed training progress to the
+            # per-shard controllers before the close decision
+            total = max(1, self.train_cfg.steps)
+            self.controller.set_progress(self.step_idx / total)
+            close, frac = self.controller.step(samples)
+            bst = close + broadcast_time(self.net, self.model_bytes,
+                                         n_ps=self.n_ps)
         else:
-            bst = float(sample.completion_times.max()) + broadcast_time(
-                self.net, self.model_bytes
-            ) * self.gather_model.loss_inflation()
+            close = max(float(s.completion_times.max()) for s in samples)
+            bst = close + broadcast_time(
+                self.net, self.model_bytes, n_ps=self.n_ps
+            ) * self.gather_models[0].loss_inflation()
             frac = np.ones(self.w)
         return bst, frac
 

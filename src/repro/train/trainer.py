@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import LTPConfig, RunConfig
 from repro.core import ltp_sync as ls
 from repro.models.api import ModelApi
@@ -120,13 +121,13 @@ def make_ltp_train_step(api: ModelApi, opt: Optimizer, mesh,
     def _zero_step(state: TrainState, batch, frac, key, lr):
         n_leaves = len(state.opt_state["m_pkts"])
         m_specs = [P(worker_spec, None)] * n_leaves
-        deltas, m_pkts, mstep, loss, realized = jax.shard_map(
+        deltas, m_pkts, mstep, loss, realized = compat.shard_map(
             inner_zero,
             mesh=mesh,
             in_specs=(rep, m_specs, rep, batch_specs, rep, rep, rep),
             out_specs=(m_specs, m_specs, rep, rep, rep),
             axis_names=set(worker_axes),
-            check_vma=True,
+            check=True,
         )(state.params, state.opt_state["m_pkts"], state.step, batch, frac,
           key, lr)
         # apply the worker-sharded packet deltas in auto land (GSPMD
@@ -147,13 +148,13 @@ def make_ltp_train_step(api: ModelApi, opt: Optimizer, mesh,
     def step(state: TrainState, batch, frac, key, lr):
         if isinstance(state.opt_state, dict) and "m_pkts" in state.opt_state:
             return _zero_step(state, batch, frac, key, lr)
-        params, opt_state, mstep, loss, realized = jax.shard_map(
+        params, opt_state, mstep, loss, realized = compat.shard_map(
             inner,
             mesh=mesh,
             in_specs=(rep, rep, rep, batch_specs, rep, rep, rep),
             out_specs=(rep, rep, rep, rep, rep),
             axis_names=set(worker_axes),
-            check_vma=True,
+            check=True,
         )(state.params, state.opt_state, state.step, batch, frac, key, lr)
         return (
             TrainState(params, opt_state, mstep),

@@ -1,6 +1,8 @@
 """Early Close controller (paper §III-B) properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import LTPConfig, NetConfig

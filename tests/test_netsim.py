@@ -1,6 +1,8 @@
 """Network-simulator invariants + protocol behaviour (paper's §V setups)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import LTPConfig, NetConfig

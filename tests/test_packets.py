@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import packets as pk
@@ -89,8 +91,8 @@ def test_delivery_mask_rate(frac, seed):
 
 
 def test_local_plan_shapes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     from jax.sharding import PartitionSpec as P
     sds = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
     plan = pk.local_plan(sds, {"w": P(None, None)}, mesh, packet_floats=8)

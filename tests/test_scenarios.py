@@ -1,0 +1,300 @@
+"""Topology-engine scenarios: registry, multi-PS conservation/degeneracy,
+bandwidth stragglers, cross traffic, per-PS/per-phase Early Close.
+
+Deliberately hypothesis-free so this coverage runs even where the
+property-testing extra is absent (the seed container).
+"""
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig
+from repro.core.early_close import (
+    EarlyCloseController,
+    GatherSample,
+    MultiPSEarlyClose,
+    phase_pct_threshold,
+)
+from repro.net.scenarios import (
+    PROTOCOLS,
+    SCENARIOS,
+    cross_traffic,
+    incast_gather,
+    list_scenarios,
+    multi_ps_gather,
+    run_scenario,
+    straggler_gather,
+    train_iterations,
+)
+from repro.net.simcore import CrossTrafficSource, Packet, Pipe, Route, Sim, Topology
+
+
+# ----------------------------------------------------------------------------
+# topology primitives
+# ----------------------------------------------------------------------------
+
+
+def test_route_chains_serialization_and_delay():
+    sim = Sim()
+    a = Pipe(sim, 8e6, 0.010, 0.0, 10, np.random.default_rng(0))
+    b = Pipe(sim, 8e6, 0.020, 0.0, 10, np.random.default_rng(0))
+    got = []
+    Route([a, b]).send(Packet(0, 0, 1000), lambda p: got.append(sim.now))
+    sim.run()
+    # 1ms serialization + 10ms delay on hop a, then again 1ms + 20ms on b
+    np.testing.assert_allclose(got, [0.032], rtol=1e-6)
+
+
+def test_route_drop_at_any_hop_kills_packet():
+    sim = Sim()
+    a = Pipe(sim, 8e6, 0.0, 0.0, 10, np.random.default_rng(0))
+    b = Pipe(sim, 8e6, 0.0, 1.0, 10, np.random.default_rng(0))  # loss=1
+    got = []
+    Route([a, b]).send(Packet(0, 0, 1000), lambda p: got.append(p.seq))
+    sim.run()
+    assert got == []
+    assert Route([a, b]).n_dropped_loss == 1
+
+
+def test_topology_groups_and_stats():
+    sim = Sim()
+    topo = Topology(sim)
+    for p in range(2):
+        topo.add_pipe(f"ps{p}/trunk", Pipe(sim, 1e9, 0.0, 0.0, 100,
+                                           np.random.default_rng(p)),
+                      group=f"ps{p}")
+    topo.pipes["ps0/trunk"].send(Packet(0, 0, 500), lambda p: None)
+    sim.run()
+    s = topo.stats()
+    assert s["ps0"]["bytes_delivered"] == 500
+    assert s["ps1"]["bytes_delivered"] == 0
+    with pytest.raises(ValueError):
+        topo.add_pipe("ps0/trunk", Pipe(sim, 1e9, 0.0, 0.0, 100))
+
+
+def test_cross_traffic_source_offered_load():
+    sim = Sim()
+    pipe = Pipe(sim, 1e9, 0.0, 0.0, 100_000, np.random.default_rng(0))
+    src = CrossTrafficSource(sim, pipe, load=0.5,
+                             rng=np.random.default_rng(1),
+                             on_mean=5e-3, off_mean=5e-3)
+    src.start()
+    sim.at(0.2, src.stop)
+    sim.run(until=0.5)
+    # duty 0.5 at load 0.5 -> ~0.25 of line rate over the 200ms window
+    delivered = src.n_delivered * 1500 * 8 / 0.2
+    assert 0.1 * 1e9 < delivered < 0.45 * 1e9
+
+
+# ----------------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------------
+
+
+def test_registry_contains_all_scenarios():
+    names = list_scenarios()
+    for expected in ("incast_gather", "multi_ps_gather", "straggler_gather",
+                     "cross_traffic", "p2p_transfer", "train_iterations",
+                     "fairness_share"):
+        assert expected in names
+
+
+def test_registry_dispatch_and_unknown():
+    net = NetConfig(10, 1, 0.0, 4096)
+    rs = run_scenario("incast_gather", "ltp", net, w=2, size_bytes=1e5,
+                      iters=1, seed=0, straggler_prob=0.0)
+    assert len(rs) == 1 and rs[0].bst_gather > 0
+    with pytest.raises(ValueError):
+        run_scenario("nope", "ltp", net)
+
+
+@pytest.mark.parametrize("proto", PROTOCOLS)
+@pytest.mark.parametrize("name", ["multi_ps_gather", "straggler_gather",
+                                  "cross_traffic"])
+def test_new_scenarios_run_for_all_protocols(name, proto):
+    net = NetConfig(10, 1, 0.001, 4096)
+    kw = {"n_ps": 2} if name == "multi_ps_gather" else {}
+    rs = run_scenario(name, proto, net, w=2, size_bytes=1e5, iters=1,
+                      seed=1, **kw)
+    r = rs[0]
+    assert np.isfinite(r.bst_gather) and r.bst_gather > 0
+    assert np.all((r.delivered > 0) & (r.delivered <= 1.0))
+
+
+# ----------------------------------------------------------------------------
+# multi-PS gather
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_ps", [1, 2, 4])
+def test_multi_ps_conserves_delivered_packets(n_ps):
+    """Lossless network + 100% close threshold: every shard flow delivers
+    every packet, for any sharding degree."""
+    net = NetConfig(10, 1, 0.0, 4096)
+    ltp = LTPConfig(data_pct_threshold=1.0)
+    rs = multi_ps_gather("ltp", net, 4, 4e5, n_ps=n_ps, iters=2, ltp=ltp,
+                         seed=2, straggler_prob=0.0)
+    for r in rs:
+        assert r.packets_expected > 0
+        assert r.packets_received == r.packets_expected
+        np.testing.assert_allclose(r.delivered, 1.0)
+        assert r.criticals_ok
+
+
+def test_multi_ps_conserves_for_reliable_protocols():
+    net = NetConfig(10, 1, 0.005, 4096)   # lossy: retransmissions recover
+    rs = multi_ps_gather("cubic", net, 3, 2e5, n_ps=2, iters=2, seed=3)
+    for r in rs:
+        assert r.packets_received == r.packets_expected
+        np.testing.assert_array_equal(r.delivered, 1.0)
+
+
+def test_multi_ps_degenerates_to_incast_at_one_ps():
+    """n_ps=1 is *the same computation* as incast_gather — statistics
+    match to float tolerance, not just qualitatively."""
+    net = NetConfig(10, 1, 0.002, 4096)
+    a = incast_gather("ltp", net, 4, 5e5, iters=4, seed=7)
+    b = multi_ps_gather("ltp", net, 4, 5e5, n_ps=1, iters=4, seed=7)
+    np.testing.assert_allclose([r.bst_gather for r in a],
+                               [r.bst_gather for r in b], rtol=1e-9)
+    np.testing.assert_allclose(np.stack([r.delivered for r in a]),
+                               np.stack([r.delivered for r in b]), rtol=1e-9)
+
+
+def test_multi_ps_sharding_speeds_up_gather():
+    """More PS shards = more aggregate trunk bandwidth = shorter BST
+    (MLfabric's observation: aggregation topology dominates)."""
+    net = NetConfig(10, 1, 0.0, 4096)
+    bst = {}
+    for n_ps in (1, 4):
+        rs = multi_ps_gather("ltp", net, 8, 1e6, n_ps=n_ps, iters=4, seed=5,
+                             straggler_prob=0.0)
+        bst[n_ps] = np.mean([r.bst_gather for r in rs[1:]])  # warm rounds
+    assert bst[4] < bst[1]
+
+
+# ----------------------------------------------------------------------------
+# stragglers & cross traffic
+# ----------------------------------------------------------------------------
+
+
+def test_straggler_ltp_beats_order_preserving_baselines():
+    """A 4x-slower access link pins reliable protocols to its drain time;
+    LTP early-closes around it (the paper's §V claim, generalized to
+    bandwidth heterogeneity)."""
+    net = NetConfig(10, 1, 0.0, 4096)
+    means = {}
+    for proto in ("ltp", "reno", "cubic"):
+        rs = straggler_gather(proto, net, 4, 5e5, iters=4, seed=9,
+                              slow_rate_mult=0.25)
+        means[proto] = np.mean([r.bst_gather for r in rs])
+    assert means["ltp"] < means["reno"]
+    assert means["ltp"] < means["cubic"]
+
+
+def test_straggler_ltp_still_delivers_criticals():
+    net = NetConfig(10, 1, 0.001, 4096)
+    rs = straggler_gather("ltp", net, 4, 3e5, iters=3, seed=4)
+    for r in rs:
+        assert r.criticals_ok
+        assert r.delivered.min() > 0.2   # even the straggler lands data
+
+
+def test_cross_traffic_slows_reliable_gather():
+    net = NetConfig(10, 1, 0.0, 4096)
+    quiet = np.mean([r.bst_gather for r in
+                     cross_traffic("cubic", net, 4, 3e5, iters=3, seed=6,
+                                   bg_load=0.0)])
+    busy = np.mean([r.bst_gather for r in
+                    cross_traffic("cubic", net, 4, 3e5, iters=3, seed=6,
+                                  bg_load=0.7)])
+    assert busy > quiet
+
+
+# ----------------------------------------------------------------------------
+# per-PS / per-phase Early Close + training coupling
+# ----------------------------------------------------------------------------
+
+
+def test_phase_threshold_ramp():
+    ltp = LTPConfig(data_pct_threshold=0.8, phase_final_pct_threshold=0.99)
+    assert phase_pct_threshold(ltp, 0.0) == pytest.approx(0.8)
+    assert phase_pct_threshold(ltp, 0.5) == pytest.approx(0.895)
+    assert phase_pct_threshold(ltp, 1.0) == pytest.approx(0.99)
+    assert phase_pct_threshold(ltp, 2.0) == pytest.approx(0.99)  # clamped
+    off = LTPConfig(data_pct_threshold=0.8)
+    assert phase_pct_threshold(off, 0.9) == pytest.approx(0.8)
+
+
+def test_multi_ps_controller_matches_single_at_one_shard():
+    net = NetConfig(10, 1, 0.0, 4096)
+    ltp = LTPConfig()
+    single = EarlyCloseController(ltp, net, 4, 1e6)
+    multi = MultiPSEarlyClose(ltp, net, 4, 1e6, n_ps=1)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        t = rng.uniform(0.5, 2.0, 4) * single.deadline
+        s = GatherSample(completion_times=t, first_arrival=np.full(4, 1e-3))
+        c1, f1 = single.step(s)
+        c2, f2 = multi.step([s])
+        assert c1 == pytest.approx(c2)
+        np.testing.assert_allclose(f1, f2)
+
+
+def test_multi_ps_controller_closes_at_slowest_shard():
+    net = NetConfig(10, 1, 0.0, 4096)
+    multi = MultiPSEarlyClose(LTPConfig(), net, 4, 1e6, n_ps=2)
+    lt = float(multi.controllers[0].lt.max())
+    # both shards finish before LT -> each closes at its own completion,
+    # and the iteration closes with the slowest shard
+    fast = GatherSample(completion_times=np.full(4, 0.4 * lt),
+                        first_arrival=np.full(4, 1e-4))
+    slow = GatherSample(completion_times=np.full(4, 0.8 * lt),
+                        first_arrival=np.full(4, 1e-4))
+    close, frac = multi.step([fast, slow])
+    assert close == pytest.approx(0.8 * lt)
+    np.testing.assert_allclose(frac, 1.0)
+
+
+def test_lost_stop_packet_does_not_stall_the_round():
+    """A 'stop' dropped on the lossy back pipe must be re-sent (data after
+    close re-triggers it) — otherwise the sender retransmits into the
+    closed receiver until the sim horizon and the trunk counters explode."""
+    net = NetConfig(10, 1, 0.02, 4096)   # ~47% chance/round of >=1 lost stop
+    rs = multi_ps_gather("ltp", net, 8, 1e6, n_ps=4, iters=4, seed=0)
+    for r in rs:
+        trunk_sent = sum(g["n_sent"] for g in r.trunk_stats.values())
+        assert trunk_sent < 20 * r.packets_expected
+
+
+def test_train_iterations_rejects_n_ps_for_non_sharding_scenarios():
+    net = NetConfig(10, 1, 0.0, 4096)
+    with pytest.raises(ValueError):
+        train_iterations("ltp", net, 4, 4e5, iters=1, n_ps=2)  # incast_gather
+
+
+def test_train_iterations_n_ps_governs_both_legs():
+    """The broadcast leg must see the same sharding degree as the gather
+    leg, whether n_ps arrives as the named arg or inside scenario_kw —
+    and multi_ps_gather's own default must not sneak in unnoticed."""
+    net = NetConfig(10, 1, 0.0, 4096)
+    one = train_iterations("ltp", net, 4, 4e5, iters=1, seed=1,
+                           scenario="multi_ps_gather")     # n_ps defaults to 1
+    ref = train_iterations("ltp", net, 4, 4e5, iters=1, seed=1)
+    assert one["bst_broadcast"] == pytest.approx(ref["bst_broadcast"])
+    np.testing.assert_allclose(one["bst_gather"], ref["bst_gather"], rtol=1e-9)
+    two = train_iterations("ltp", net, 4, 4e5, iters=1, seed=1,
+                           scenario="multi_ps_gather", n_ps=2)
+    assert two["bst_broadcast"] < one["bst_broadcast"]
+
+
+def test_train_iterations_over_new_scenarios():
+    net = NetConfig(10, 1, 0.002, 4096)
+    base = train_iterations("ltp", net, 4, 4e5, iters=2, seed=3)
+    for scen, kw in [("multi_ps_gather", {"n_ps": 2}),
+                     ("straggler_gather", {}),
+                     ("cross_traffic", {"bg_load": 0.3})]:
+        out = train_iterations("ltp", net, 4, 4e5, iters=2, seed=3,
+                               scenario=scen, **kw)
+        assert out["bst"].shape == base["bst"].shape
+        assert np.all(np.isfinite(out["bst"])) and np.all(out["bst"] > 0)
+        assert out["delivered"].shape == (2, 4)

@@ -121,14 +121,14 @@ def test_hlo_walker_scan_equals_unroll():
 
 
 def test_hlo_walker_collectives():
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((1,), ("d",))
 
     def f(x):
         return jax.lax.psum(x, "d")
 
     from jax.sharding import PartitionSpec as P
-    g = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
+    g = compat.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
     c = jax.jit(g).lower(jnp.ones((1, 256), jnp.float32)).compile()
     cost = ha.analyze(c.as_text())
     assert cost.collective_bytes >= 256 * 4 or cost.collective_bytes == 0
@@ -138,7 +138,7 @@ def test_hlo_walker_collectives():
 def test_pstrainer_short_run_decreases_loss():
     cfg = get_config("papernet").replace(d_model=8, n_layers=3)
     api = build(cfg)
-    tc = TrainConfig(batch=64, lr=0.05, steps=25)
+    tc = TrainConfig(batch=64, lr=0.1, steps=25)
     tr = PSTrainer(api, sgd_momentum(), tc, LTPConfig(), NetConfig(10, 1, 0.001, 4096),
                    n_workers=4, protocol="ltp", compute_time=0.01, seed=0)
     data = SyntheticCIFAR(seed=1)

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.config import LTPConfig
 from repro.configs import get_reduced
 from repro.core import ltp_sync as ls
@@ -19,10 +20,7 @@ from repro.train.trainer import (
 
 
 def _mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
@@ -44,7 +42,7 @@ def test_ltp_full_delivery_matches_plain(setup):
     s_plain, m_plain = plain(state, batch, lr)
 
     ltp_cfg = LTPConfig(packet_floats=128)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = make_ltp_train_step(api, opt, mesh, ltp_cfg, ("data",),
                                    jax.tree.map(lambda _: P(), batch))
         s_ltp, m_ltp = step(state, batch, jnp.ones((1,)),
@@ -67,7 +65,7 @@ def test_ltp_zero_variant_matches_psum_variant(setup):
     frac = jnp.full((1,), 0.7)
     key = jax.random.PRNGKey(3)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step = make_ltp_train_step(api, opt, mesh, ltp_cfg, ("data",),
                                    batch_specs)
         s_psum, _ = step(state, batch, frac, key, lr)

@@ -1,0 +1,124 @@
+"""Perf-regression gate over the BENCH_*.json records (CI perf-smoke).
+
+Compares freshly generated records against the committed baselines:
+
+* ``*_wall_s``        — FAIL when current > ``--max-ratio`` x baseline
+                        (default 2.0: the CI budget for runner jitter);
+* ``*_events_per_sec`` / ``*_gbps`` / ``*_speedup``
+                      — FAIL when current < baseline / ``--max-ratio``
+                        (throughput floors: the committed acceptance
+                        metrics must not silently collapse);
+* metric present in the baseline but missing from the current record
+                      — FAIL (a benchmark quietly dropped).
+
+New metrics in the current record are allowed (they become baseline on
+the next commit of the JSONs).
+
+Wall-clocks are machine-dependent: the 2x budget is what absorbs the
+authoring-machine-vs-CI-runner gap, and a host mismatch between the two
+records is printed as a warning so a tripped gate is easy to triage.
+The in-run *relative* metrics (``grid64_coalesce_speedup``, the
+events/sec floors) are machine-independent and carry the real signal.
+
+  python -m benchmarks.check_regression \
+      --baseline-dir /tmp/bench-baseline --current-dir . \
+      BENCH_netsim.json BENCH_kernels.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_FILES = ("BENCH_netsim.json", "BENCH_kernels.json")
+
+#: metric-name suffix -> direction ("up" = bigger is better)
+RULES: Tuple[Tuple[str, str], ...] = (
+    ("_wall_s", "down"),
+    ("_events_per_sec", "up"),
+    ("_gbps", "up"),
+    ("_speedup", "up"),
+)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _metrics(doc: dict) -> Dict[str, float]:
+    return {k: v for k, v in doc.get("metrics", {}).items()
+            if isinstance(v, (int, float))}
+
+
+def compare(current: Dict[str, float], baseline: Dict[str, float],
+            max_ratio: float) -> List[str]:
+    """Returns a list of human-readable failure lines (empty = pass)."""
+    failures = []
+    for key, base in sorted(baseline.items()):
+        direction = next((d for suf, d in RULES if key.endswith(suf)), None)
+        if direction is None or base == 0:
+            continue
+        if key not in current:
+            failures.append(f"{key}: missing from current record "
+                            f"(baseline {base})")
+            continue
+        cur = current[key]
+        ratio = cur / base
+        ok = ratio <= max_ratio if direction == "down" else \
+            ratio >= 1.0 / max_ratio
+        mark = "ok" if ok else "REGRESSION"
+        print(f"  {key:45s} base={base:<12g} cur={cur:<12g} "
+              f"x{ratio:.2f} [{mark}]")
+        if not ok:
+            failures.append(
+                f"{key}: {cur:g} vs baseline {base:g} "
+                f"(x{ratio:.2f}, budget x{max_ratio:g} {direction})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None,
+                    help=f"record names (default: {', '.join(DEFAULT_FILES)})")
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed baseline JSONs")
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding the fresh JSONs (default: .)")
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    files = args.files or list(DEFAULT_FILES)
+    all_failures = []
+    for name in files:
+        base_path = os.path.join(args.baseline_dir, name)
+        cur_path = os.path.join(args.current_dir, name)
+        if not os.path.exists(base_path):
+            print(f"{name}: no baseline at {base_path} — skipping "
+                  f"(commit one to arm the gate)")
+            continue
+        if not os.path.exists(cur_path):
+            all_failures.append(f"{name}: current record missing at "
+                                f"{cur_path}")
+            continue
+        base_doc, cur_doc = _load(base_path), _load(cur_path)
+        if base_doc.get("host") != cur_doc.get("host"):
+            print(f"{name}: WARNING host mismatch "
+                  f"(baseline {base_doc.get('host')} vs "
+                  f"current {cur_doc.get('host')}) — wall-clock ratios "
+                  f"compare different machines")
+        print(f"{name}:")
+        all_failures += compare(_metrics(cur_doc), _metrics(base_doc),
+                                args.max_ratio)
+    if all_failures:
+        print("\nperf regression gate FAILED:", file=sys.stderr)
+        for f in all_failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nperf regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,7 +8,6 @@ values (T4-class GPU): 50 ms for the 98MB model, 90 ms for the 528MB one.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.config import NetConfig
 from repro.net.scenarios import train_iterations

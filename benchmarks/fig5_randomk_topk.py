@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.configs import get_config
 from repro.core import compression
 from repro.data import SyntheticCIFAR, batches

@@ -1,0 +1,87 @@
+"""Kernel microbench — the PS-side hot loop as Pallas tiles (DESIGN.md §7).
+
+Times ``kernels.dropfill`` (bubble-fill + compensation gate) and
+``kernels.packet_reduce`` (fused masked multi-worker reduction) through
+the ``ops.py`` padding wrappers, plus the end-to-end sync step
+(``core.ltp_sync.reduce_packet_stream``) under both backends.
+
+On CPU the kernels run in interpret mode, so the GB/s figures are the
+*interpreter's* — a stable regression baseline for CI, not hardware
+numbers; on a real TPU pass ``interpret=False`` for roofline rates.
+
+Writes ``BENCH_kernels.json`` at the repo root (consumed by
+``benchmarks.check_regression``) and the usual rows under results/.
+
+  PYTHONPATH=src python -m benchmarks.run --only kernel_bench
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LTPConfig
+from repro.core.ltp_sync import reduce_packet_stream
+from repro.kernels import ops
+
+from benchmarks.common import emit
+from benchmarks.sweep_scenarios import write_bench
+
+
+def _time(fn, *args, reps: int = 3, **kw) -> float:
+    """Best-of-reps wall seconds, after one compile/warmup call."""
+    jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    w = 8
+    n = 1024 if quick else 8192
+    p = 360                       # non-lane-aligned: exercises ops padding
+    pkts_w = jnp.asarray(rng.normal(size=(w, n, p)).astype(np.float32))
+    masks_w = jnp.asarray((rng.random((w, n)) < 0.8).astype(np.float32))
+    pkts = pkts_w[0]
+    mask = masks_w[0]
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+
+    rows = []
+    metrics = {}
+
+    t = _time(ops.ltp_dropfill, pkts, mask, scale)
+    gb = 2 * n * p * 4 / 1e9      # one read + one write of the stream
+    rows.append({"kernel": "dropfill", "shape": f"({n},{p})",
+                 "wall_s": round(t, 4), "gbps": round(gb / t, 3)})
+    metrics["dropfill_wall_s"] = round(t, 4)
+    metrics["dropfill_gbps"] = round(gb / t, 3)
+
+    t = _time(ops.ltp_packet_reduce, pkts_w, masks_w)
+    gb = (w + 1) * n * p * 4 / 1e9    # W reads + one write per output tile
+    rows.append({"kernel": "packet_reduce", "shape": f"({w},{n},{p})",
+                 "wall_s": round(t, 4), "gbps": round(gb / t, 3)})
+    metrics["packet_reduce_wall_s"] = round(t, 4)
+    metrics["packet_reduce_gbps"] = round(gb / t, 3)
+
+    ltp = LTPConfig(compensation="count")
+    for backend in ("python", "pallas"):
+        fn = jax.jit(lambda pw, mw, be=backend: reduce_packet_stream(
+            pw, mw, ltp, w, backend=be))
+        t = _time(fn, pkts_w, masks_w)
+        rows.append({"kernel": f"sync_{backend}", "shape": f"({w},{n},{p})",
+                     "wall_s": round(t, 4)})
+        metrics[f"sync_{backend}_wall_s"] = round(t, 4)
+
+    write_bench(metrics, quick, "BENCH_kernels.json")
+    emit(rows, "kernel_bench")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,55 @@
+"""Render the README perf table from ``BENCH_netsim.json``.
+
+  PYTHONPATH=src python -m benchmarks.perf_table [path/to/BENCH_netsim.json]
+
+Prints a GitHub-flavored markdown table; the README "Performance" section
+is this script's output, regenerated whenever the baseline is refreshed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.sweep_scenarios import REPO_ROOT
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    m = doc["metrics"]
+    k = m.get("grid64_coalesce", "?")
+    lines = [
+        "| cell (64 workers, 2 MB model) | wall s | sim packet-events/s |",
+        "|---|---:|---:|",
+    ]
+    for proto in ("ltp", "cubic"):
+        for n_ps in (1, 4):
+            wall = m.get(f"grid64_{proto}_ps{n_ps}_wall_s")
+            eps = m.get(f"grid64_{proto}_ps{n_ps}_events_per_sec")
+            if wall is None:
+                continue
+            lines.append(f"| {proto} x {n_ps} PS (trains of {k}) "
+                         f"| {wall:g} | {eps:,.0f} |")
+    ref = m.get("grid64_ref_per_packet_events_per_sec")
+    twin = m.get("grid64_ref_coalesced_events_per_sec")
+    if ref and twin:
+        lines.append(f"| 64x4 reference: per-packet -> trains of {k} "
+                     f"| — | {ref:,.0f} -> {twin:,.0f} "
+                     f"({m.get('grid64_coalesce_speedup', '?')}x) |")
+    sweep = m.get("sweep_small_wall_s")
+    if sweep is not None:
+        lines.append(f"| small scenario grid (4 protocols x 7 cells) "
+                     f"| {sweep:g} | — |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else os.path.join(REPO_ROOT, "BENCH_netsim.json")
+    print(render(path))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,7 @@ from benchmarks import (
     fig12_throughput,
     fig13_tta,
     fig15_fairness,
+    kernel_bench,
     roofline,
     sweep_scenarios,
 )
@@ -32,6 +33,7 @@ MODULES = {
     "fig15_fairness": fig15_fairness,
     "roofline": roofline,
     "scenario_sweep": sweep_scenarios,
+    "kernel_bench": kernel_bench,
 }
 
 

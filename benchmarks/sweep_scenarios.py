@@ -1,4 +1,4 @@
-"""Scenario-grid sweep over the topology engine (DESIGN.md §5).
+"""Scenario-grid sweep over the topology engine (DESIGN.md §5, §7).
 
 Runs every gather scenario in the registry grid over protocol x knob:
 
@@ -6,23 +6,43 @@ Runs every gather scenario in the registry grid over protocol x knob:
   straggler_gather  slow_rate_mult in {0.5, 0.25[, 0.1]}
   cross_traffic     bg_load in {0.0, 0.5[, 0.8]}
 
+plus the paper-scale **grid64** (64 workers x {1, 4} PS shards, coalesced
+packet trains) that the per-packet engine could not fit into quick mode.
+
 Emits one row per (scenario, protocol, knob): mean/p99 gather BST, mean
 delivered fraction, and LTP's speedup over the same cell's cubic run.
 Transfer sizes are scaled (2 MB quick / 5 MB full per model) so the whole
 grid finishes in seconds on CPU; trends — not absolute seconds — are the
 output.
 
+The run also writes the machine-readable perf record ``BENCH_netsim.json``
+at the repo root — wall-clocks and simulator events/sec (packet deliveries
+per wall second; one heap event carries a train of up to K) — which the CI
+perf-smoke job diffs against the committed baseline
+(``benchmarks.check_regression``).
+
   PYTHONPATH=src python -m benchmarks.run --only scenario_sweep
   PYTHONPATH=src python -m benchmarks.sweep_scenarios          # standalone
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
+import time
+
 import numpy as np
 
 from repro.config import NetConfig
+from repro.net import simcore
 from repro.net.scenarios import PROTOCOLS, run_scenario
 
 from benchmarks.common import emit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: packet-train length for the paper-scale cells (DESIGN.md §7)
+GRID64_COALESCE = 32
 
 
 def _cells(quick: bool):
@@ -37,12 +57,65 @@ def _cells(quick: bool):
         yield "cross_traffic", {"bg_load": v}, f"bg_load={v}"
 
 
+def _timed_cell(proto: str, net: NetConfig, *, w: int, size: float,
+                n_ps: int, iters: int, coalesce: int, seed: int = 13):
+    """One measured multi_ps_gather cell -> (results, perf dict)."""
+    simcore.PERF.reset()
+    t0 = time.time()
+    rs = run_scenario("multi_ps_gather", proto, net, w=w, size_bytes=size,
+                      iters=iters, seed=seed, n_ps=n_ps, coalesce=coalesce)
+    wall = time.time() - t0
+    return rs, {
+        "wall_s": round(wall, 3),
+        "events_per_sec": round(simcore.PERF.packets / max(wall, 1e-9)),
+        "heap_events": simcore.PERF.events,
+        "packets": simcore.PERF.packets,
+        "bst_mean_ms": round(float(np.mean([r.bst_gather for r in rs])) * 1e3,
+                             2),
+    }
+
+
+def grid64(quick: bool = True):
+    """Paper-scale sweep: 64 workers x {1, 4} PS, coalesced trains — plus a
+    per-packet reference cell and its coalesced twin (identical workload)
+    so the recorded speedup is apples-to-apples."""
+    net = NetConfig(10, 1, 0.001, 4096)
+    size = 2e6 if quick else 5e6
+    iters = 2 if quick else 4
+    rows = []
+    metrics = {"grid64_coalesce": GRID64_COALESCE}
+    for proto in ("ltp", "cubic"):
+        for n_ps in (1, 4):
+            _, perf = _timed_cell(proto, net, w=64, size=size, n_ps=n_ps,
+                                  iters=iters, coalesce=GRID64_COALESCE)
+            rows.append({"scenario": "grid64", "knob": f"n_ps={n_ps}",
+                         "protocol": proto, **perf})
+            metrics[f"grid64_{proto}_ps{n_ps}_wall_s"] = perf["wall_s"]
+            metrics[f"grid64_{proto}_ps{n_ps}_events_per_sec"] = \
+                perf["events_per_sec"]
+    # apples-to-apples speedup: the per-packet engine on the SAME 64x4 cell
+    # (same model size — per-packet throughput degrades with flow length,
+    # so a smaller ref would flatter the old engine); one round keeps the
+    # quick run bounded (~12s)
+    _, ref = _timed_cell("ltp", net, w=64, size=size, n_ps=4,
+                         iters=1 if quick else 2, coalesce=1)
+    twin_eps = metrics["grid64_ltp_ps4_events_per_sec"]
+    metrics["grid64_ref_per_packet_events_per_sec"] = ref["events_per_sec"]
+    metrics["grid64_ref_coalesced_events_per_sec"] = twin_eps
+    metrics["grid64_coalesce_speedup"] = round(
+        twin_eps / max(ref["events_per_sec"], 1), 2)
+    rows.append({"scenario": "grid64_ref", "knob": "coalesce=1",
+                 "protocol": "ltp", **ref})
+    return rows, metrics
+
+
 def run(quick: bool = True):
     rows = []
     iters = 4 if quick else 10
     size = 2e6 if quick else 5e6
     w = 8
     net = NetConfig(10, 1, 0.001, 4096)
+    t0 = time.time()
     for scenario, kw, knob in _cells(quick):
         cell = {}
         for proto in PROTOCOLS:
@@ -59,8 +132,29 @@ def run(quick: bool = True):
             })
         for r in rows[-len(PROTOCOLS):]:
             r["ltp_speedup_vs_cubic"] = round(cell["cubic"] / cell["ltp"], 2)
+    sweep_wall = time.time() - t0
+    g_rows, metrics = grid64(quick)
+    rows.extend(g_rows)
+    metrics["sweep_small_wall_s"] = round(sweep_wall, 3)
+    write_bench(metrics, quick, "BENCH_netsim.json")
     emit(rows, "sweep_scenarios")
     return rows
+
+
+def write_bench(metrics: dict, quick: bool, name: str) -> str:
+    """Write a machine-readable perf record at the repo root."""
+    path = os.path.join(REPO_ROOT, name)
+    with open(path, "w") as f:
+        json.dump({
+            "schema": 1,
+            "quick": quick,
+            "host": {"python": platform.python_version(),
+                     "machine": platform.machine()},
+            "metrics": metrics,
+        }, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 if __name__ == "__main__":

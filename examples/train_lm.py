@@ -12,7 +12,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import LTPConfig, NetConfig, TrainConfig
@@ -46,7 +45,7 @@ def main():
     cfg = cfg.replace(dtype="float32")
     api = build(cfg)
     n_params = sum(
-        int(np.prod(l.shape)) for l in jax.tree.leaves(
+        int(np.prod(x.shape)) for x in jax.tree.leaves(
             jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0))))
     )
     print(f"model: {cfg.name} ({n_params/1e6:.1f}M params)")

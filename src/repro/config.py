@@ -131,6 +131,14 @@ class LTPConfig:
     phase_final_pct_threshold: Optional[float] = None
     error_feedback: bool = False     # beyond-paper
     critical_per_tensor: int = 1     # first/last packet(s) of each tensor marked critical
+    # PS-side aggregation backend (DESIGN.md §7): "python" is the jnp
+    # reference; "pallas" routes the bubble-fill + masked multi-worker
+    # reduction through the fused kernels in ``repro.kernels``.
+    sync_backend: str = "python"     # python | pallas
+    # Pallas interpret mode: True executes kernel bodies in the Python
+    # interpreter (the only option on CPU); set False on a real TPU to
+    # compile the fused tiles.
+    kernel_interpret: bool = True
     seed: int = 0
 
 

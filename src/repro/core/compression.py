@@ -5,7 +5,7 @@ behaviour, and to demonstrate LTP composing with compression (§VI-A).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 def _flatten(grads) -> Tuple[jnp.ndarray, Any]:
     leaves, treedef = jax.tree_util.tree_flatten(grads)
-    flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
-    return flat, (treedef, [(l.shape, l.dtype) for l in leaves])
+    flat = jnp.concatenate([x.astype(jnp.float32).ravel() for x in leaves])
+    return flat, (treedef, [(x.shape, x.dtype) for x in leaves])
 
 
 def _unflatten(flat, meta):

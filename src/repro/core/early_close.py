@@ -25,7 +25,7 @@ Beyond-paper extensions (DESIGN.md §3.3, §5):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

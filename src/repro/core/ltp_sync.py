@@ -20,12 +20,18 @@ Compensation modes (beyond-paper, DESIGN.md §2):
 
 Error feedback (beyond-paper): each worker accumulates the packets it
 failed to deliver and re-adds them next iteration (EF-SGD style).
+
+Aggregation backends (DESIGN.md §7): every masked-aggregation step
+dispatches through ``apply_delivery`` / ``reduce_packet_stream`` on
+``LTPConfig.sync_backend`` — ``python`` is the pure-jnp reference,
+``pallas`` runs the fused ``kernels.dropfill`` / ``kernels.packet_reduce``
+tiles (one HBM pass for the whole PS hot loop; interpret mode on CPU).
+Both backends agree to float tolerance (tests/test_sync_backend.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +42,80 @@ from repro import compat
 from repro.compat import shard_map as _shard_map
 from repro.config import LTPConfig
 from repro.core import packets as pk
+from repro.kernels import ops as kops
 from repro.models.sharding import dp_axes
 
 # number of leading mesh axes used as the worker index, in order
 _DP_ORDER = ("pod", "data")
+
+
+# ----------------------------------------------------------------------------
+# backend dispatch: the PS hot loop as fused kernels or jnp reference
+# ----------------------------------------------------------------------------
+
+
+def apply_delivery(packets, mask, scale=None, *, backend: str = "python",
+                   interpret: bool = True):
+    """Bubble-fill + compensation gate: ``packets * mask * scale``.
+
+    packets: (n_packets, payload); mask/scale: (n_packets,). The pallas
+    backend runs ``kernels.dropfill`` through the ``ops`` padding wrappers
+    (arbitrary geometry in, lane-aligned tiles inside).
+    """
+    if backend == "pallas":
+        m = mask if scale is None else mask * scale
+        return kops.ltp_dropfill(packets, m, interpret=interpret)
+    gate = mask if scale is None else mask * scale
+    return packets * gate[:, None].astype(packets.dtype)
+
+
+def reduce_packet_stream(packets_w, masks_w, ltp: LTPConfig, n_workers: int,
+                         *, expected_frac=None, backend: Optional[str] = None,
+                         interpret: Optional[bool] = None,
+                         premasked: bool = False):
+    """The PS-side hot loop: one fused masked multi-worker reduction.
+
+    packets_w: (W, n_packets, payload); masks_w: (W, n_packets) {0,1}.
+    Returns the (n_packets, payload) compensated mean under
+    ``ltp.compensation`` (paper | count | expected; ``expected`` needs
+    ``expected_frac``, the Early-Close target fraction).
+
+    backend="pallas" executes ``kernels.packet_reduce`` — the worker loop
+    is unrolled inside the kernel so each output tile is written once and
+    each input tile read once (single HBM pass). backend="python" is the
+    jnp reference the kernels are verified against.
+
+    ``premasked=True`` declares that ``packets_w`` has already been gated
+    by ``masks_w`` (the error-feedback path materializes the masked
+    stream anyway): the python backend skips the multiply; the pallas
+    kernel re-applies the {0,1} mask, which is idempotent.
+    """
+    backend = backend or ltp.sync_backend
+    interpret = ltp.kernel_interpret if interpret is None else interpret
+    comp = ltp.compensation
+    if backend == "pallas":
+        out = kops.ltp_packet_reduce(
+            packets_w, masks_w,
+            compensation="count" if comp == "count" else "paper",
+            interpret=interpret)
+        if comp == "expected":
+            # paper-mode output is sum/W; expected = sum/(W*E[frac])
+            ef = (jnp.mean(masks_w) if expected_frac is None
+                  else jnp.mean(jnp.asarray(expected_frac)))
+            out = out / jnp.maximum(ef, 1e-6)
+        return out
+    masks_w = masks_w.astype(jnp.float32)
+    gated = (packets_w.astype(jnp.float32) if premasked
+             else packets_w.astype(jnp.float32) * masks_w[:, :, None])
+    tot = jnp.sum(gated, axis=0)
+    if comp == "count":
+        cnt = jnp.maximum(jnp.sum(masks_w, axis=0), 1.0)
+        return tot / cnt[:, None]
+    if comp == "expected":
+        ef = (jnp.mean(masks_w) if expected_frac is None
+              else jnp.mean(jnp.asarray(expected_frac)))
+        return tot / (n_workers * jnp.maximum(ef, 1e-6))
+    return tot / n_workers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +158,7 @@ class LTPSync:
         W = self.n_workers
         plan = self.plan
         ltp = self.ltp
-        leaf_dtypes = [l.dtype for l in jax.tree_util.tree_leaves(grads)]
+        leaf_dtypes = [x.dtype for x in jax.tree_util.tree_leaves(grads)]
 
         def local(g, frac, key, res):
             # worker index over dp axes (row-major over (pod, data))
@@ -96,11 +172,17 @@ class LTPSync:
             if res is not None:
                 flat = flat + res.reshape(flat.shape)
             mask = pk.delivery_mask(plan, k, frac[widx])
-            sent = flat * mask[:, None]
+            # bubble-fill gate + compensation both dispatch on the backend:
+            # fused dropfill tiles under "pallas", jnp reference otherwise
+            sent = apply_delivery(flat, mask, backend=ltp.sync_backend,
+                                  interpret=ltp.kernel_interpret)
             tot = jax.lax.psum(sent, dp)
             if ltp.compensation == "count":
                 cnt = jax.lax.psum(mask, dp)
-                out = tot / jnp.maximum(cnt, 1.0)[:, None]
+                out = apply_delivery(tot, jnp.ones_like(cnt),
+                                     1.0 / jnp.maximum(cnt, 1.0),
+                                     backend=ltp.sync_backend,
+                                     interpret=ltp.kernel_interpret)
             elif ltp.compensation == "expected":
                 mean_frac = jnp.mean(
                     jnp.where(jnp.asarray(plan.critical), 1.0, jnp.mean(frac))
@@ -117,7 +199,8 @@ class LTPSync:
         args_specs = (self.grad_specs, P(), P())
         out_res_spec = res_spec
         if res_in is None:
-            f = lambda g, fr, k: local(g, fr, k, None)[::2]  # (grads, realized)
+            def f(g, fr, k):
+                return local(g, fr, k, None)[::2]   # (grads, realized)
             synced, realized = _shard_map(
                 f,
                 mesh=mesh,
@@ -203,7 +286,9 @@ def masked_psum_leafwise(grads, key, frac, ltp: LTPConfig, worker_axes,
     realized = None
     for i, leaf in enumerate(leaves):
         m = _leaf_packet_mask(i, leaf.shape, k, frac[widx], ltp)
-        view = _as_packets(leaf, p) * m[:, None]
+        view = apply_delivery(_as_packets(leaf, p), m,
+                              backend=ltp.sync_backend,
+                              interpret=ltp.kernel_interpret)
         # per-leaf f32 psum: one all-reduce per tensor with a uniform dtype
         # (XLA:CPU CHECK-fails on one huge mixed-dtype tuple all-reduce —
         # and per-tensor reduces are what a production runtime overlaps

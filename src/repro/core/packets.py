@@ -58,7 +58,7 @@ def make_plan(
 ) -> PacketPlan:
     """Build the packet plan from a pytree of arrays or ShapeDtypeStructs."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    shapes = tuple(tuple(l.shape) for l in leaves)
+    shapes = tuple(tuple(x.shape) for x in leaves)
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
     offsets = tuple(int(x) for x in (np.cumsum([0] + sizes)[:-1]))
     n_floats = int(sum(sizes))
@@ -84,7 +84,7 @@ def make_plan(
 def flatten(plan: PacketPlan, tree: Any) -> jnp.ndarray:
     """Pytree -> (n_packets, packet_floats) float32 stream (zero-padded)."""
     leaves = jax.tree_util.tree_leaves(tree)
-    flat = jnp.concatenate([l.astype(jnp.float32).ravel() for l in leaves])
+    flat = jnp.concatenate([x.astype(jnp.float32).ravel() for x in leaves])
     pad = plan.padded_floats - plan.n_floats
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
@@ -100,7 +100,7 @@ def unflatten(plan: PacketPlan, packets: jnp.ndarray, dtypes: Sequence[Any] | No
         leaf = jax.lax.slice_in_dim(flat, off, off + sz).reshape(shape)
         leaves.append(leaf)
     if dtypes is not None:
-        leaves = [l.astype(d) for l, d in zip(leaves, dtypes)]
+        leaves = [x.astype(d) for x, d in zip(leaves, dtypes)]
     return jax.tree_util.tree_unflatten(plan.treedef, leaves)
 
 

@@ -17,15 +17,14 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.config import LTPConfig, TrainConfig
+from repro.config import LTPConfig
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import hlo_analysis
 from repro.launch.mesh import (
@@ -138,7 +137,7 @@ def build_train(cfg, shape, mesh, *, ltp: bool, zero: bool = False):
     )
     fsdp = not ltp   # LTP workers hold replicated weights (PS semantics)
     state_specs = jax.tree_util.tree_map_with_path(
-        lambda path, l: spec_for(path, l.shape, mesh, fsdp=fsdp), state_sds
+        lambda path, x: spec_for(path, x.shape, mesh, fsdp=fsdp), state_sds
     )
     in_sds, in_specs = input_shardings(cfg, shape, mesh)
     lr_sds = jax.ShapeDtypeStruct((), jnp.float32)

@@ -11,7 +11,6 @@ the dry-run sets XLA_FLAGS before importing anything else).
 """
 from __future__ import annotations
 
-import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -19,11 +19,9 @@ Two modes:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import save_checkpoint

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import cnn, encdec, transformer
-from repro.models.sharding import ShardCtx, NULL_CTX
+from repro.models.sharding import NULL_CTX
 from repro.shapes import InputShape
 
 SDS = jax.ShapeDtypeStruct

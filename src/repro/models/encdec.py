@@ -9,7 +9,7 @@ a shape-fidelity caveat noted in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -149,9 +149,9 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any], *,
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     """Self KV per decoder layer + precomputed cross KV per layer."""
-    l = cfg.n_layers
-    self_shp = (l, batch, max_seq, cfg.n_kv, cfg.hd)
-    cross_shp = (l, batch, cfg.encoder_frames, cfg.n_kv, cfg.hd)
+    nl = cfg.n_layers
+    self_shp = (nl, batch, max_seq, cfg.n_kv, cfg.hd)
+    cross_shp = (nl, batch, cfg.encoder_frames, cfg.n_kv, cfg.hd)
     return {
         "self_k": jnp.zeros(self_shp, dtype),
         "self_v": jnp.zeros(self_shp, dtype),

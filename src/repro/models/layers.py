@@ -1,8 +1,7 @@
 """Shared building blocks: inits, norms, MLPs, rotary embeddings."""
 from __future__ import annotations
 
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

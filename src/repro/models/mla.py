@@ -9,7 +9,6 @@ the whole point of MLA (576 B/token/layer for the assigned config vs
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

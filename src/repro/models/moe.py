@@ -15,7 +15,7 @@ shard_map all-to-all is a §Perf hillclimb.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ quadratic-within-chunk work maps onto the MXU, state passing is O(S/Lc).
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ MLA, SSM states for mamba) — that is what makes long_500k feasible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,20 +15,25 @@ close; a worker's delivered fraction = mean over its shard flows).
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
-from repro.net.simcore import Packet, Sim
+from repro.net.simcore import Packet, Sim, TrainItems
 
 
 class LTPFlowReceiver:
-    """Tracks one sender's flow; emits per-packet ACKs."""
+    """Tracks one sender's flow; emits per-packet ACKs.
+
+    With a train-aware ``send_ack_train`` attached, coalesced data trains
+    (``on_data_train``) are acknowledged as one ACK train — K ACK packets,
+    one heap event (DESIGN.md §7).
+    """
 
     def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
         self.sim = sim
         self.send_ack = send_ack
+        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
         self.flow = flow
         self.n: Optional[int] = None
         self.critical: Optional[np.ndarray] = None
@@ -52,37 +57,66 @@ class LTPFlowReceiver:
         need = np.flatnonzero(self.critical)
         return all(int(s) in self.received for s in need)
 
-    def on_data(self, pkt: Packet, notify: Callable[[], None]):
-        if self.closed:
-            return
+    def _ack_for(self, pkt: Packet, t: float) -> Packet:
+        """Per-packet bookkeeping (reg metadata / received set / t_start /
+        t_full at the packet's true arrival ``t``) -> the ACK to send.
+        Shared by the per-packet and coalesced-train paths so they cannot
+        drift."""
         if pkt.kind == "reg":
             self.n = pkt.meta["n"]
             self.critical = pkt.meta.get("critical")
             if self.t_start is None:
-                self.t_start = self.sim.now
-            self.send_ack(Packet(self.flow, -1, 41, kind="ack", meta={}))
-            if self.n is not None and len(self.received) >= self.n \
-                    and self.t_full is None:
-                self.t_full = self.sim.now
-            notify()
+                self.t_start = t
+            ack = Packet(self.flow, -1, 41, kind="ack", meta={})
+        else:
+            self.received.add(pkt.seq)
+            ack = Packet(self.flow, pkt.seq, 41, kind="ack",
+                         meta={"echo": pkt.meta,
+                               "order": pkt.meta.get("order", -1)})
+        if self.n is not None and len(self.received) >= self.n \
+                and self.t_full is None:
+            self.t_full = t
+        return ack
+
+    def on_data(self, pkt: Packet, notify: Callable[[], None]):
+        if self.closed:
             return
-        self.received.add(pkt.seq)
-        ack = Packet(self.flow, pkt.seq, 41, kind="ack",
-                     meta={"echo": pkt.meta, "order": pkt.meta.get("order", -1)})
-        self.send_ack(ack)
-        if self.n is not None and len(self.received) >= self.n and self.t_full is None:
-            self.t_full = self.sim.now
+        self.send_ack(self._ack_for(pkt, self.sim.now))
         notify()
+
+    def on_data_train(self, items: TrainItems, notify: Callable[[], None]):
+        """Coalesced delivery: one call per train, per-packet arrival times
+        from the pipe; ACKs return as a single train."""
+        if self.closed:
+            return
+        acks: List[Packet] = [self._ack_for(pkt, t) for pkt, t in items]
+        if acks:
+            if self.send_ack_train is not None:
+                self.send_ack_train(acks)
+            else:
+                for a in acks:
+                    self.send_ack(a)
+        notify()
+
+    def delivered_mask(self) -> np.ndarray:
+        """(n,) bool — per-packet delivery state (True = received)."""
+        if self.n is None:
+            return np.zeros(0, bool)
+        mask = np.zeros(self.n, bool)
+        for s in self.received:
+            if 0 <= s < self.n:
+                mask[s] = True
+        return mask
 
     def bubbles(self) -> np.ndarray:
         """(n,) bool — packets that must be zero-filled at close."""
         if self.n is None:
             return np.zeros(0, bool)
-        mask = np.ones(self.n, bool)
-        for s in self.received:
-            if 0 <= s < self.n:
-                mask[s] = False
-        return mask
+        return ~self.delivered_mask()
+
+
+def _noop() -> None:
+    pass
 
 
 class PSGatherReceiver:
@@ -119,6 +153,10 @@ class PSGatherReceiver:
     def attach_ack(self, flow: int, send_ack: Callable[[Packet], None]):
         self.flows[flow].send_ack = send_ack
 
+    def attach_ack_train(self, flow: int,
+                         send_ack_train: Callable[[List[Packet]], None]):
+        self.flows[flow].send_ack_train = send_ack_train
+
     def on_data(self, pkt: Packet):
         fr = self.flows.get(pkt.flow)
         if fr is None:
@@ -130,6 +168,24 @@ class PSGatherReceiver:
             self.send_stop(pkt.flow)
             return
         fr.on_data(pkt, self._check)
+
+    def on_data_train(self, items: TrainItems):
+        """Coalesced delivery: all packets in a train share one event time,
+        so the close rule is evaluated once after the whole train (identical
+        to per-packet evaluation at equal ``sim.now``)."""
+        if self.closed:
+            for flow in {p.flow for p, _ in items}:
+                if flow in self.flows:
+                    self.send_stop(flow)
+            return
+        by_flow: Dict[int, TrainItems] = {}
+        for pkt, t in items:
+            by_flow.setdefault(pkt.flow, []).append((pkt, t))
+        for flow, fitems in by_flow.items():
+            fr = self.flows.get(flow)
+            if fr is not None:
+                fr.on_data_train(fitems, _noop)
+        self._check()
 
     @property
     def agg_pct(self) -> float:
@@ -174,6 +230,18 @@ class PSGatherReceiver:
     # --- results -------------------------------------------------------------
     def delivered_fracs(self) -> np.ndarray:
         return np.array([f.pct for f in self.flows.values()])
+
+    def delivery_masks(self) -> np.ndarray:
+        """(W, n) bool — per-(worker, packet) delivery state at close.
+
+        This is the mask the PS-side aggregation consumes: True packets
+        carry gradient payload, False packets are bubble-filled (the exact
+        input shape of ``kernels.packet_reduce``, DESIGN.md §7)."""
+        ms = [f.delivered_mask() for f in self.flows.values()]
+        n = max((len(m) for m in ms), default=0)
+        if n == 0:
+            return np.zeros((len(ms), 0), bool)
+        return np.stack([np.pad(m, (0, n - len(m))) for m in ms])
 
     def full_times(self) -> np.ndarray:
         return np.array([
@@ -240,6 +308,10 @@ class ShardedGatherReceiver:
     def per_shard_full_times(self) -> np.ndarray:
         """(n_ps, W) raw 100%-times — feeds per-PS LT adaptation."""
         return np.stack([s.full_times() for s in self.shards])
+
+    def delivery_masks(self) -> np.ndarray:
+        """(n_ps, W, n) bool per-(shard, worker, packet) delivery state."""
+        return np.stack([s.delivery_masks() for s in self.shards])
 
     def payload_packets_received(self) -> int:
         return sum(len(f.received) for s in self.shards

@@ -38,14 +38,12 @@ from repro.config import LTPConfig, NetConfig
 from repro.net import senders as snd
 from repro.net.ltp_receiver import (
     LTPFlowReceiver,
-    PSGatherReceiver,
     ShardedGatherReceiver,
 )
 from repro.net.simcore import (
     CrossTrafficSource,
     Packet,
     Pipe,
-    Route,
     Sim,
     Topology,
 )
@@ -234,10 +232,14 @@ class GatherResult:
     packets_received: int = 0                  # payload packets at receiver(s)
     packets_expected: int = 0                  # n_ps * W * pkts-per-shard
     trunk_stats: Optional[Dict] = None         # Topology.stats() of the trunks
+    # (n_ps, W, n) bool per-(shard, worker, packet) delivery state at close —
+    # the exact mask shape the kernel-backed sync consumes (DESIGN.md §7).
+    # All-True for reliable protocols.
+    masks: Optional[np.ndarray] = None
 
 
 def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
-                    rng: np.random.Generator,
+                    rng: np.random.Generator, coalesce: int = 1,
                     ) -> Tuple[Topology, List[CrossTrafficSource]]:
     """PS trunks (one pipe group per shard) + optional worker access links
     + optional cross-traffic sources. Forward routes come from
@@ -262,7 +264,7 @@ def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
             src = CrossTrafficSource(
                 sim, topo.pipes[f"ps{p}/trunk"], spec.cross_traffic_load,
                 rng=rng, on_mean=spec.cross_on_ms * 1e-3,
-                off_mean=spec.cross_off_ms * 1e-3)
+                off_mean=spec.cross_off_ms * 1e-3, train_len=coalesce)
             sources.append(src)
             src.start()
     return topo, sources
@@ -282,6 +284,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                 critical_frac: float = 0.01,
                 start_delays: Optional[np.ndarray] = None,
                 spec: Optional[GatherSpec] = None,
+                coalesce: int = 1,
                 ) -> Tuple[GatherResult, List[List[dict]]]:
     """One gather round over the topology in ``spec``.
 
@@ -293,12 +296,20 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
     stragglers (GC pauses, CPU contention, slow gradient production) —
     the source of the paper's Fig-3 "starved flows" beyond pure protocol
     dynamics. A worker's delay applies to all of its shard flows.
+
+    ``coalesce`` > 1 turns on the packet-train engine (DESIGN.md §7):
+    senders emit trains of up to ``coalesce`` packets per heap event, the
+    receivers acknowledge per train, and cross-traffic bursts inject in
+    chunks — ~coalesce x fewer events for the same simulated traffic.
+    ``coalesce=1`` is the per-packet reference path. BBR ignores it (its
+    pacing clock is inherently per-packet).
     """
     spec = spec or GatherSpec()
     n_ps = spec.n_ps
+    coalesce = max(1, int(coalesce))
     sim = Sim()
     bw = net.bandwidth_gbps * 1e9
-    topo, sources = _build_topology(sim, net, w, spec, rng)
+    topo, sources = _build_topology(sim, net, w, spec, rng, coalesce)
     n = _npkts(size_bytes / n_ps, protocol)   # packets per shard flow
     senders: Dict[Tuple[int, int], object] = {}
     half_rtt = net.rtprop_ms * 1e-3 / 2
@@ -341,9 +352,15 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                 s = snd.LTPSender(sim, _fwd_path(topo, spec, p, f),
                                   shard.on_data, n, critical=crit,
                                   flow=f, rng=rng,
-                                  on_done=lambda s: flow_stopped())
+                                  on_done=lambda s: flow_stopped(),
+                                  train_len=coalesce)
                 shard.attach_ack(f, lambda pkt, s=s, back=back:
                                  back.send(pkt, s.on_ack))
+                if coalesce > 1:
+                    s.deliver_train = shard.on_data_train
+                    shard.attach_ack_train(
+                        f, lambda acks, s=s, back=back:
+                        back.send_train(acks, s.on_ack_train))
                 stops[(p, f)] = (lambda s=s, back=back: back.send(
                     Packet(s.flow, -2, 41, kind="stop"), s.on_ack))
                 _warm(s, warm[p][f] if warm else None)
@@ -362,6 +379,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
             packets_received=sharded.payload_packets_received(),
             packets_expected=n_ps * w * n,
             trunk_stats=topo.stats(),
+            masks=sharded.delivery_masks(),
         )
         return res, [[_save_warm(senders[(p, f)]) for f in range(w)]
                      for p in range(n_ps)]
@@ -381,10 +399,15 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                     stop_sources()
 
             s = snd.make_sender(protocol, sim, _fwd_path(topo, spec, p, f),
-                                None, n, flow=f, rng=rng, on_done=on_done)
+                                None, n, flow=f, rng=rng, on_done=on_done,
+                                train_len=coalesce)
             r = snd.TcpReceiver(
                 sim, lambda pkt, s=s, back=back: back.send(pkt, s.on_ack), f)
             s.deliver = r.on_data
+            if coalesce > 1:
+                s.deliver_train = r.on_data_train
+                r.send_ack_train = (lambda acks, s=s, back=back:
+                                    back.send_train(acks, s.on_ack_train))
             # registration so the receiver knows flow length
             _warm(s, warm[p][f] if warm else None)
             senders[(p, f)] = s
@@ -407,6 +430,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
         packets_received=sum(len(r.received) for r in receivers),
         packets_expected=n_ps * w * n,
         trunk_stats=topo.stats(),
+        masks=np.ones((n_ps, w, n), bool),   # reliable: everything lands
     )
     return res, [[_save_warm(senders[(p, f)]) for f in range(w)]
                  for p in range(n_ps)]
@@ -415,7 +439,8 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
 def _iterate_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                     iters: int, ltp: Optional[LTPConfig], seed: int,
                     straggler_prob: float, straggler_scale: float,
-                    spec: Optional[GatherSpec] = None) -> List[GatherResult]:
+                    spec: Optional[GatherSpec] = None,
+                    coalesce: int = 1) -> List[GatherResult]:
     """Repeated gather rounds with per-(shard, link) Early Close adaptation.
 
     Host-jitter stragglers: with prob ``straggler_prob`` a worker starts
@@ -450,7 +475,8 @@ def _iterate_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
         res, warm = _run_gather(protocol, net, w, size_bytes, rng, warm,
                                 lt.max(axis=1), deadline,
                                 ltp.data_pct_threshold,
-                                start_delays=delays, spec=spec)
+                                start_delays=delays, spec=spec,
+                                coalesce=coalesce)
         results.append(res)
         pfull = res.per_ps_full if res.per_ps_full is not None else \
             res.full_times[None, :]
@@ -481,11 +507,13 @@ def _iterate_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
 def incast_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                   iters: int = 10, ltp: Optional[LTPConfig] = None,
                   seed: int = 0, straggler_prob: float = 0.15,
-                  straggler_scale: float = 0.6) -> List[GatherResult]:
+                  straggler_scale: float = 0.6,
+                  coalesce: int = 1) -> List[GatherResult]:
     """The paper's W-to-1 incast gather with Early Close adaptation —
     the n_ps=1 homogeneous case of the gather engine."""
     return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
-                           straggler_prob, straggler_scale, GatherSpec())
+                           straggler_prob, straggler_scale, GatherSpec(),
+                           coalesce=coalesce)
 
 
 @register_scenario("multi_ps_gather")
@@ -493,7 +521,8 @@ def multi_ps_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                     n_ps: int = 2, iters: int = 10,
                     ltp: Optional[LTPConfig] = None, seed: int = 0,
                     straggler_prob: float = 0.15,
-                    straggler_scale: float = 0.6) -> List[GatherResult]:
+                    straggler_scale: float = 0.6,
+                    coalesce: int = 1) -> List[GatherResult]:
     """Sharded gather over n_ps parameter-server shards (DESIGN.md §5).
 
     The model splits evenly: each worker sends size/n_ps to every shard,
@@ -502,7 +531,7 @@ def multi_ps_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
     """
     return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
                            straggler_prob, straggler_scale,
-                           GatherSpec(n_ps=n_ps))
+                           GatherSpec(n_ps=n_ps), coalesce=coalesce)
 
 
 @register_scenario("straggler_gather")
@@ -511,7 +540,7 @@ def straggler_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                      seed: int = 0, n_slow: int = 0,
                      slow_rate_mult: float = 0.25,
                      slow_delay_ms: float = 0.0,
-                     n_ps: int = 1) -> List[GatherResult]:
+                     n_ps: int = 1, coalesce: int = 1) -> List[GatherResult]:
     """Bandwidth stragglers: the last ``n_slow`` workers (default w//4,
     at least 1) attach through access links at ``slow_rate_mult`` x the
     trunk rate (+ optional extra delay). Early-Close LT thresholds adapt
@@ -526,7 +555,7 @@ def straggler_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
     spec = GatherSpec(n_ps=n_ps, worker_rate_mult=mult,
                       worker_delay_ms=delay if slow_delay_ms else None)
     return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
-                           0.0, 0.0, spec)
+                           0.0, 0.0, spec, coalesce=coalesce)
 
 
 @register_scenario("cross_traffic")
@@ -534,7 +563,7 @@ def cross_traffic(protocol: str, net: NetConfig, w: int, size_bytes: float,
                   iters: int = 6, ltp: Optional[LTPConfig] = None,
                   seed: int = 0, bg_load: float = 0.5,
                   on_ms: float = 5.0, off_ms: float = 5.0,
-                  n_ps: int = 1) -> List[GatherResult]:
+                  n_ps: int = 1, coalesce: int = 1) -> List[GatherResult]:
     """Incast gather competing with open-loop background traffic on the
     trunk(s): other tenants' flows crossing the same ToR egress. The
     background load is never ACKed or retransmitted (pure interference);
@@ -543,7 +572,7 @@ def cross_traffic(protocol: str, net: NetConfig, w: int, size_bytes: float,
     spec = GatherSpec(n_ps=n_ps, cross_traffic_load=bg_load,
                       cross_on_ms=on_ms, cross_off_ms=off_ms)
     return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
-                           0.0, 0.0, spec)
+                           0.0, 0.0, spec, coalesce=coalesce)
 
 
 # ----------------------------------------------------------------------------
@@ -588,12 +617,19 @@ def train_iterations(protocol: str, net: NetConfig, w: int, model_bytes: float,
              / (net.bandwidth_gbps * 1e9 / 8.0 * max(util, 1e-3)))
     bst = np.array([g.bst_gather + bcast for g in gs]) / scale
     delivered = np.stack([g.delivered for g in gs])
+    # (iters, W, n_ps * n) bool: each worker's full-model packet stream is
+    # the concatenation of its per-shard streams — the delivery masks the
+    # kernel-backed sync consumes (PSTrainer(mask_trace=...), DESIGN.md §7)
+    masks = None
+    if all(g.masks is not None for g in gs):
+        masks = np.stack([np.concatenate(list(g.masks), axis=1) for g in gs])
     return {
         "bst": bst,
         "bst_gather": np.array([g.bst_gather for g in gs]) / scale,
         "bst_broadcast": bcast / scale,
         "delivered": delivered,
         "fct_all": np.concatenate([g.fcts for g in gs]) / scale,
+        "delivery_masks": masks,
     }
 
 

@@ -5,6 +5,13 @@ BBR is a simplified BDP prober (loss-agnostic rate control, reliable).
 LTP (paper §III/§IV): out-of-order transmission, per-packet ACK,
 3-OOO-ACK loss detection, CQ/NQ/RQ queues, BDP-based CC with approximate
 pacing, and receiver-driven Early Close ("stop").
+
+Packet trains (DESIGN.md §7): with ``train_len > 1`` and a train-aware
+``deliver_train`` callback attached, LTP and the window-based TCP family
+emit bursts as coalesced trains through ``Pipe.send_train`` and consume
+batched ACK trains via ``on_ack_train`` — K packets per heap event in
+both directions. BBR keeps its per-packet pacing clock (its control law
+is the inter-send spacing itself) and ignores ``train_len``.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.net.simcore import Packet, Pipe, Sim
+from repro.net.simcore import Packet, Pipe, Sim, TrainItems
 
 MSS = 1460          # TCP payload bytes per packet
 TCP_OVERHEAD = 40
@@ -35,12 +42,15 @@ def register_sender(name: str):
 
 
 def make_sender(protocol: str, sim: "Sim", pipe, deliver, n_packets: int, *,
-                flow: int = 0, rng=None, on_done=None, critical=None):
+                flow: int = 0, rng=None, on_done=None, critical=None,
+                train_len: int = 1):
     """Uniform sender construction over every registered protocol.
 
     ``pipe`` is anything with ``send(pkt, deliver)`` — a ``Pipe`` or a
     multi-hop ``Route``. LTP-specific knobs (``critical``, ``rng``) are
-    ignored by the TCP family.
+    ignored by the TCP family. ``train_len`` > 1 enables coalesced packet
+    trains on senders that support them (callers must also attach a
+    train-aware ``deliver_train``).
     """
     try:
         cls = SENDER_REGISTRY[protocol]
@@ -50,8 +60,9 @@ def make_sender(protocol: str, sim: "Sim", pipe, deliver, n_packets: int, *,
             f"{sorted(SENDER_REGISTRY)}") from None
     if issubclass(cls, LTPSender):
         return cls(sim, pipe, deliver, n_packets, critical=critical,
-                   flow=flow, rng=rng, on_done=on_done)
-    return cls(sim, pipe, deliver, n_packets, flow=flow, on_done=on_done)
+                   flow=flow, rng=rng, on_done=on_done, train_len=train_len)
+    return cls(sim, pipe, deliver, n_packets, flow=flow, on_done=on_done,
+               train_len=train_len)
 
 
 class RateEstimator:
@@ -107,25 +118,43 @@ class TcpReceiver:
     def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
         self.sim = sim
         self.send_ack = send_ack
+        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
         self.flow = flow
         self.received: Set[int] = set()
         self.next_expected = 0
         self.complete_time: Optional[float] = None
         self.n_total: Optional[int] = None
 
-    def on_data(self, pkt: Packet):
+    def _ack_for(self, pkt: Packet) -> Packet:
         if pkt.kind == "reg":
             self.n_total = pkt.meta["n"]
         else:
             self.received.add(pkt.seq)
             while self.next_expected in self.received:
                 self.next_expected += 1
-        ack = Packet(self.flow, pkt.seq, TCP_OVERHEAD, kind="ack",
-                     meta={"cum": self.next_expected, "echo": pkt.meta})
-        self.send_ack(ack)
+        return Packet(self.flow, pkt.seq, TCP_OVERHEAD, kind="ack",
+                      meta={"cum": self.next_expected, "echo": pkt.meta})
+
+    def on_data(self, pkt: Packet):
+        self.send_ack(self._ack_for(pkt))
         if self.n_total is not None and self.next_expected >= self.n_total \
                 and self.complete_time is None:
             self.complete_time = self.sim.now
+
+    def on_data_train(self, items: TrainItems):
+        """Process a coalesced train; the completion stamp uses the true
+        per-packet arrival time, and the ACKs go back as one train."""
+        acks = []
+        for pkt, t in items:
+            acks.append(self._ack_for(pkt))
+            if self.n_total is not None and self.next_expected >= self.n_total \
+                    and self.complete_time is None:
+                self.complete_time = t
+        if self.send_ack_train is not None:
+            self.send_ack_train(acks)
+        else:
+            for a in acks:
+                self.send_ack(a)
 
 
 class _TcpBase:
@@ -135,10 +164,16 @@ class _TcpBase:
     DUPTHRESH = 3
 
     def __init__(self, sim: Sim, pipe: Pipe, deliver: Callable, n_packets: int,
-                 flow: int = 0, mss: int = MSS, on_done: Optional[Callable] = None):
+                 flow: int = 0, mss: int = MSS, on_done: Optional[Callable] = None,
+                 train_len: int = 1):
         self.sim = sim
         self.pipe = pipe
         self.deliver = deliver
+        self.deliver_train: Optional[Callable[[TrainItems], None]] = None
+        self.train_len = max(1, int(train_len))
+        self._train_buf: Optional[List[Packet]] = None
+        self._in_ack_train = False
+        self._rto_dirty = False
         self.n = n_packets
         self.flow = flow
         self.mss = mss
@@ -186,6 +221,9 @@ class _TcpBase:
         return max(0.01, self.srtt + 4 * self.rttvar)
 
     def _arm_rto(self):
+        if self._in_ack_train:       # one re-arm per ack train, at its end
+            self._rto_dirty = True
+            return
         if self.rto_event is not None:
             self.sim.cancel(self.rto_event)
         self.tlp_armed = True
@@ -232,7 +270,10 @@ class _TcpBase:
                      meta={"t": self.sim.now})
         self.inflight.add(seq)
         self.sent_time[seq] = self.sim.now
-        self.pipe.send(pkt, self.deliver)
+        if self._train_buf is not None:
+            self._train_buf.append(pkt)
+        else:
+            self.pipe.send(pkt, self.deliver)
 
     def _prune_inflight(self):
         """Expire inflight entries older than RTO (silent queue drops would
@@ -245,6 +286,21 @@ class _TcpBase:
                 self.retx.append(s)
 
     def _pump(self):
+        if self._in_ack_train:       # one pump per ack train, at its end
+            return
+        if self.train_len > 1 and self.deliver_train is not None:
+            self._train_buf = []
+            try:
+                self._pump_window()
+            finally:
+                buf, self._train_buf = self._train_buf, None
+            for i in range(0, len(buf), self.train_len):
+                self.pipe.send_train(buf[i:i + self.train_len],
+                                     self.deliver_train)
+            return
+        self._pump_window()
+
+    def _pump_window(self):
         while len(self.inflight) < int(self.cwnd):
             if self.retx:
                 seq = self.retx.popleft()
@@ -315,6 +371,25 @@ class _TcpBase:
             if self.on_done:
                 self.on_done(self)
             return
+        self._pump()
+
+    def on_ack_train(self, items: TrainItems):
+        """Consume a batched ACK train: per-ack cwnd/SACK bookkeeping runs
+        unchanged, but the RTO re-arm and the send pump fire once for the
+        whole train instead of once per ack."""
+        if self.done:
+            return
+        self._in_ack_train = True
+        self._rto_dirty = False
+        try:
+            for pkt, _t in items:
+                self.on_ack(pkt)
+                if self.done:
+                    return
+        finally:
+            self._in_ack_train = False
+        if self._rto_dirty:
+            self._arm_rto()
         self._pump()
 
 
@@ -452,10 +527,12 @@ class LTPSender:
     def __init__(self, sim: Sim, pipe: Pipe, deliver: Callable, n_packets: int,
                  critical: Optional[np.ndarray] = None, flow: int = 0,
                  payload: int = LTP_PAYLOAD, rng: Optional[np.random.Generator] = None,
-                 on_done: Optional[Callable] = None):
+                 on_done: Optional[Callable] = None, train_len: int = 1):
         self.sim = sim
         self.pipe = pipe
         self.deliver = deliver
+        self.deliver_train: Optional[Callable[[TrainItems], None]] = None
+        self.train_len = max(1, int(train_len))
         self.n = n_packets
         self.flow = flow
         self.payload = payload
@@ -528,8 +605,10 @@ class LTPSender:
         if self.critical[seq]:
             self.cq.append(seq)
         else:
-            pos = self.rng.integers(0, len(self.rq) + 1)  # random-in, first-out
-            self.rq.insert(int(pos), seq)
+            # random-in, first-out; scalar random() is ~2x cheaper than
+            # integers() and this runs once per detected loss
+            pos = int(self.rng.random() * (len(self.rq) + 1))
+            self.rq.insert(pos, seq)
 
     def _next_seq(self) -> Optional[int]:
         while self.cq:
@@ -563,9 +642,23 @@ class LTPSender:
             self._phase_start = self.sim.now
         return self.GAINS[getattr(self, "_phase", 0)]
 
+    def _next_packet(self) -> Optional[Packet]:
+        seq = self._next_seq()
+        if seq is None:
+            return None
+        order = self.order_ctr
+        self.order_ctr += 1
+        self.send_order[seq] = order
+        self.outstanding.append((order, seq))
+        self.total_sent += 1
+        return Packet(self.flow, seq, self.payload, kind="data",
+                      critical=bool(self.critical[seq]),
+                      meta={"t": self.sim.now, "order": order})
+
     def _pump(self):
         if self.done or self.stopped:
             return
+        coalesce = self.train_len > 1 and self.deliver_train is not None
         while len(self.outstanding) < self._cap():
             if self.sim.now < self.next_send_time:
                 if self.pacing_timer is None:
@@ -574,23 +667,34 @@ class LTPSender:
                         self._pump()
                     self.pacing_timer = self.sim.at(self.next_send_time, fire)
                 return
-            seq = self._next_seq()
-            if seq is None:
-                return
-            order = self.order_ctr
-            self.order_ctr += 1
-            self.send_order[seq] = order
-            self.outstanding.append((order, seq))
-            pkt = Packet(self.flow, seq, self.payload, kind="data",
-                         critical=bool(self.critical[seq]),
-                         meta={"t": self.sim.now, "order": order})
-            self.pipe.send(pkt, self.deliver)
-            self.total_sent += 1
+            if coalesce:
+                # per-packet admission is `while len(outstanding) < cap`, so a
+                # fractional BDP cap still admits up to ceil(cap) — flooring
+                # here would stall one packet short of the reference path
+                room = math.ceil(self._cap()) - len(self.outstanding)
+                batch = []
+                while len(batch) < min(self.train_len, room):
+                    pkt = self._next_packet()
+                    if pkt is None:
+                        break
+                    batch.append(pkt)
+                if not batch:
+                    return
+                self.pipe.send_train(batch, self.deliver_train)
+                n_sent = len(batch)
+            else:
+                pkt = self._next_packet()
+                if pkt is None:
+                    return
+                self.pipe.send(pkt, self.deliver)
+                n_sent = 1
             # approximate pacing (paper §III-D): rate-limit bursts above 20
-            # packets at the BBR-computed pacing rate
+            # packets at the BBR-computed pacing rate (a whole train pays
+            # its K packets' worth of pacing budget at once)
             rate = self.est.btlbw * self._gain()
             if rate > 0 and len(self.outstanding) > 20:
-                self.next_send_time = self.sim.now + self.payload * 8.0 / rate
+                self.next_send_time = self.sim.now + \
+                    n_sent * self.payload * 8.0 / rate
 
     def on_ack(self, pkt: Packet):
         if self.done:
@@ -610,24 +714,43 @@ class LTPSender:
         echo = pkt.meta.get("echo") or {}
         if "t" in echo:
             self.est.on_ack(self.payload, self.sim.now - echo["t"])
-        if self.startup and (
-            not math.isfinite(self.est.rtprop)
-            or self.sim.now - getattr(self, "_last_check", -1.0) > self.est.rtprop
-        ):
-            self._last_check = self.sim.now
-            bw = self.est.btlbw
-            if bw > self.full_bw * 1.25:
-                self.full_bw = bw
-                self.full_cnt = 0
-            else:
-                self.full_cnt += 1
-                if self.full_cnt >= 3:
-                    self.startup = False
+        self._startup_check()
         self.acked.add(seq)
         order = pkt.meta.get("order", self.send_order.get(seq, -1))
         self.highest_acked_order = max(self.highest_acked_order, order)
         self._arm_watchdog()
-        # 3-OOO-ACK loss detection over the outgoing order queue
+        self._scan_outstanding()
+        if len(self.acked) >= self.n:
+            self._finish()
+            return
+        self._pump()
+
+    def _startup_check(self):
+        """BBR-style startup exit: btlbw plateau over ~3 rtprop rounds."""
+        if not self.startup:
+            return
+        if math.isfinite(self.est.rtprop) and \
+                self.sim.now - getattr(self, "_last_check", -1.0) <= self.est.rtprop:
+            return
+        self._last_check = self.sim.now
+        bw = self.est.btlbw
+        if bw > self.full_bw * 1.25:
+            self.full_bw = bw
+            self.full_cnt = 0
+        else:
+            self.full_cnt += 1
+            if self.full_cnt >= 3:
+                self.startup = False
+
+    def _finish(self):
+        self.done = True
+        if self.watchdog is not None:
+            self.sim.cancel(self.watchdog)
+        if self.on_done:
+            self.on_done(self)
+
+    def _scan_outstanding(self):
+        """3-OOO-ACK loss detection over the outgoing order queue."""
         while self.outstanding:
             o, s = self.outstanding[0]
             if s in self.acked:
@@ -637,11 +760,35 @@ class LTPSender:
                 self._requeue_lost(s)
             else:
                 break
+
+    def on_ack_train(self, items: TrainItems):
+        """Consume a batched ACK train: per-ack bookkeeping is a tight
+        loop; the rate estimator takes ONE aggregated sample for the train
+        (stretch-ack semantics: total acked bytes, min RTT), and the OOO
+        scan / watchdog / pump each run once."""
+        if self.done:
+            return
+        rtts = []
+        for pkt, _t in items:
+            if pkt.kind == "stop":
+                self.on_ack(pkt)        # terminal: fires on_done
+                return
+            if pkt.seq == -1:
+                self.reg_acked = True
+                continue
+            echo = pkt.meta.get("echo") or {}
+            if "t" in echo:
+                rtts.append(self.sim.now - echo["t"])
+            self.acked.add(pkt.seq)
+            order = pkt.meta.get("order", self.send_order.get(pkt.seq, -1))
+            if order > self.highest_acked_order:
+                self.highest_acked_order = order
+        if rtts:
+            self.est.on_ack(self.payload * len(rtts), min(rtts))
+        self._startup_check()
+        self._arm_watchdog()
+        self._scan_outstanding()
         if len(self.acked) >= self.n:
-            self.done = True
-            if self.watchdog is not None:
-                self.sim.cancel(self.watchdog)
-            if self.on_done:
-                self.on_done(self)
+            self._finish()
             return
         self._pump()

@@ -18,18 +18,50 @@ arbitrary gather topologies:
   ``CrossTrafficSource`` open-loop on/off background load injected at a
                          pipe's ingress, stealing serialization slots
                          from the senders under test.
+
+Packet trains (DESIGN.md §7): beyond the per-packet ``Pipe.send``, a
+sender may emit a whole *train* of packets through ``Pipe.send_train`` —
+one heap event for the entire train, with queue-admission and loss
+decisions drawn as a single vectorized numpy pass over the same RNG
+stream the per-packet path would consume, and per-packet arrival times
+handed to the receiver in one callback. This is what makes paper-scale
+sweeps (64 workers x 4 PS) feasible in quick mode.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+#: A delivered train: per-packet ``(packet, arrival_time)`` in arrival order.
+TrainItems = List[Tuple["Packet", float]]
 
-@dataclasses.dataclass
+
+class PerfCounters:
+    """Process-wide simulator throughput counters (read by benchmarks).
+
+    ``events`` counts heap events processed; ``packets`` counts packet
+    deliveries scheduled (train members count individually) — the ratio
+    is the effective coalescing factor.
+    """
+
+    __slots__ = ("events", "packets")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.events = 0
+        self.packets = 0
+
+
+PERF = PerfCounters()
+
+
+@dataclasses.dataclass(slots=True)      # slots: the sim allocates millions
 class Packet:
     flow: int
     seq: int              # packet sequence within the flow (jigsaw piece id)
@@ -47,6 +79,7 @@ class Sim:
         self._heap: List = []
         self._ids = itertools.count()
         self.cancelled: set = set()
+        self.n_events = 0
 
     def at(self, t: float, fn: Callable[[], None]) -> int:
         eid = next(self._ids)
@@ -72,6 +105,8 @@ class Sim:
             self.now = t
             fn()
             n += 1
+        self.n_events += n
+        PERF.events += n
         return n
 
 
@@ -119,12 +154,96 @@ class Pipe:
             return True  # consumed wire time, dropped in flight
         arrive = self.busy_until + self.delay
         self.bytes_delivered += pkt.size
+        PERF.packets += 1
 
         def _deliver(p=pkt):
             deliver(p)
 
         self.sim.at(arrive, _deliver)
         return True
+
+    def send_train(self, pkts: Sequence[Packet],
+                   deliver_train: Callable[[TrainItems], None],
+                   t_ready: Optional[Sequence[float]] = None) -> int:
+        """Send a train of packets as ONE heap event (DESIGN.md §7).
+
+        Admission, serialization, and loss for the whole train are decided
+        in a single vectorized pass that consumes the pipe's RNG stream in
+        the same order the per-packet path would (queue drops never draw;
+        admitted packets draw in send order), so a same-seed burst through
+        ``send_train`` reproduces ``send`` exactly: same drops, same
+        arrival times, same bytes. ``deliver_train`` fires once, at the
+        last survivor's arrival, with per-packet ``(pkt, arrival_time)``
+        pairs in arrival order.
+
+        ``t_ready`` optionally gives per-packet *logical* enqueue times —
+        used by multi-hop ``Route`` relays (each packet's previous-hop
+        arrival) and staggered cross-traffic bursts. The relay event fires
+        at the train's last arrival, so logical times may precede the
+        event time: admission and serialization are computed retroactively
+        at those times (exact when no other flow touched the pipe in
+        between; a bounded approximation under interleaving). That path
+        walks the train in order — still one event. Returns the number of
+        packets admitted past the droptail queue.
+        """
+        if not pkts:
+            return 0
+        now = self.sim.now
+        if t_ready is None:
+            # same-instant burst: time does not advance within the event, so
+            # the backlog only grows while admitting and freezes on a drop —
+            # the first droptail drop ends the admitted prefix. Serialization
+            # is a running sum in plain floats (cheaper than numpy's fixed
+            # per-call cost at typical train lengths of 8..64); only the
+            # loss draws vectorize — one RNG call, consuming the stream in
+            # the exact order the per-packet path would.
+            busy = self.busy_until
+            qcap = self.cap * 1500.0 * 8.0 / self.rate    # cap in seconds
+            inv_rate = 8.0 / self.rate
+            admitted = []
+            ends = []
+            for p in pkts:
+                if busy - now >= qcap or qcap <= 0:
+                    break
+                busy = (busy if busy > now else now) + \
+                    (p.size + self.overhead) * inv_rate
+                admitted.append(p)
+                ends.append(busy)
+            self.n_dropped_queue += len(pkts) - len(admitted)
+            if not admitted:
+                return 0
+            self.busy_until = busy
+            n_acc = len(admitted)
+            self.n_sent += n_acc
+            keep = self.rng.random(n_acc) >= self.loss
+            self.n_dropped_loss += n_acc - int(keep.sum())
+            items = [(p, e + self.delay)
+                     for p, e, k in zip(admitted, ends, keep) if k]
+            if not items:
+                return n_acc
+        else:
+            items = []
+            busy = self.busy_until
+            n_acc = 0
+            for pkt, tr in zip(pkts, t_ready):
+                tr = float(tr)
+                if max(0.0, busy - tr) * self.rate / 8.0 / 1500.0 >= self.cap:
+                    self.n_dropped_queue += 1
+                    continue
+                busy = max(tr, busy) + (pkt.size + self.overhead) * 8.0 / self.rate
+                self.n_sent += 1
+                n_acc += 1
+                if self.rng.random() < self.loss:
+                    self.n_dropped_loss += 1
+                    continue
+                items.append((pkt, busy + self.delay))
+            self.busy_until = busy
+            if not items:
+                return n_acc
+        self.bytes_delivered += sum(p.size for p, _ in items)
+        PERF.packets += len(items)
+        self.sim.at(items[-1][1], lambda: deliver_train(items))
+        return n_acc
 
 
 class Route:
@@ -151,6 +270,24 @@ class Route:
         return self.pipes[i].send(
             pkt, lambda p, i=i: self._hop(i + 1, p, deliver)
         )
+
+    def send_train(self, pkts: Sequence[Packet],
+                   deliver_train: Callable[[TrainItems], None],
+                   t_ready: Optional[Sequence[float]] = None) -> int:
+        """Train relay over the hop chain: each hop's survivors re-enter
+        the next hop as one train, carrying their per-packet hop-arrival
+        times as that hop's enqueue times — still one event per hop."""
+        return self._hop_train(0, list(pkts), deliver_train, t_ready)
+
+    def _hop_train(self, i: int, pkts, deliver_train, t_ready) -> int:
+        if i == len(self.pipes) - 1:
+            return self.pipes[i].send_train(pkts, deliver_train, t_ready)
+
+        def relay(items, i=i):
+            self._hop_train(i + 1, [p for p, _ in items], deliver_train,
+                            [t for _, t in items])
+
+        return self.pipes[i].send_train(pkts, relay, t_ready)
 
     # aggregate counters over hops (drop-anywhere semantics)
     @property
@@ -218,12 +355,13 @@ class CrossTrafficSource:
                  rng: Optional[np.random.Generator] = None,
                  pkt_bytes: int = 1500,
                  on_mean: float = 10e-3, off_mean: float = 10e-3,
-                 duty: Optional[float] = None):
+                 duty: Optional[float] = None, train_len: int = 1):
         self.sim = sim
         self.pipe = pipe
         self.load = float(load)
         self.rng = rng or np.random.default_rng(0)
         self.pkt_bytes = pkt_bytes
+        self.train_len = max(1, int(train_len))
         self.on_mean = on_mean
         if duty is not None:
             # explicit duty cycle: derive the OFF mean from it
@@ -254,8 +392,18 @@ class CrossTrafficSource:
         on = self.rng.exponential(self.on_mean)
         gap = self.pkt_bytes * 8.0 / (self.load * self.pipe.rate)
         n = max(1, int(on / gap))
-        for i in range(n):
-            self.sim.after(i * gap, self._inject)
+        if self.train_len > 1:
+            # chunked trains: one event injects up to train_len packets with
+            # staggered enqueue times, pre-claiming at most train_len * gap
+            # of future wire time (a bounded approximation of the per-packet
+            # interleaving; DESIGN.md §7)
+            for start in range(0, n, self.train_len):
+                k = min(self.train_len, n - start)
+                self.sim.after(start * gap,
+                               lambda k=k, gap=gap: self._inject_train(k, gap))
+        else:
+            for i in range(n):
+                self.sim.after(i * gap, self._inject)
         off = self.rng.exponential(self.off_mean)
         self.sim.after(on + off, self._burst)
 
@@ -268,5 +416,21 @@ class CrossTrafficSource:
                      meta={"cross": True})
         self.pipe.send(pkt, self._sink)
 
+    def _inject_train(self, k: int, gap: float) -> None:
+        if self._stopped:
+            return
+        now = self.sim.now
+        pkts = []
+        for _ in range(k):
+            self._seq += 1
+            self.n_injected += 1
+            pkts.append(Packet(self.FLOW_ID, self._seq, self.pkt_bytes,
+                               kind="data", meta={"cross": True}))
+        self.pipe.send_train(pkts, self._sink_train,
+                             t_ready=[now + i * gap for i in range(k)])
+
     def _sink(self, pkt: Packet) -> None:
         self.n_delivered += 1
+
+    def _sink_train(self, items: TrainItems) -> None:
+        self.n_delivered += len(items)

@@ -7,7 +7,7 @@ the same sharding as params (elementwise ops — GSPMD propagates).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +49,8 @@ def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     def init(params):
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {
             "m": jax.tree.map(f32, params),
             "v": jax.tree.map(f32, params),

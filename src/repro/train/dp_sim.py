@@ -18,6 +18,15 @@ Transport timing backend: AnalyticIncastModel (fast) or precomputed DES
 samples (pass ``bst_trace`` — e.g. from any registered net scenario via
 ``repro.net.scenarios.train_iterations``).
 
+Delivery masks are drawn host-side each step — Bernoulli(frac) with
+critical packets pinned, or, when ``mask_trace`` is given, the actual
+per-(worker, packet) delivery masks a DES gather produced
+(``train_iterations(...)["delivery_masks"]``) — and feed one fused
+masked multi-worker reduction (``core.ltp_sync.reduce_packet_stream``).
+``LTPConfig.sync_backend`` picks the aggregation backend: the jnp
+reference ("python") or the Pallas dropfill/packet_reduce kernels
+("pallas"); both agree to float tolerance.
+
 Multi-PS (DESIGN.md §5): with ``n_ps > 1`` the model shards over n_ps
 parameter servers, each behind its own trunk; Early Close runs one
 controller per shard (``MultiPSEarlyClose``) and the iteration closes
@@ -28,16 +37,14 @@ training converges.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.core import ltp_sync as ls
 from repro.core import packets as pk
 from repro.core.early_close import (
     AnalyticIncastModel,
@@ -49,7 +56,7 @@ from repro.optim import Optimizer, lr_at
 
 
 def params_bytes(params) -> int:
-    return sum(l.size * 4 for l in jax.tree_util.tree_leaves(params))
+    return sum(x.size * 4 for x in jax.tree_util.tree_leaves(params))
 
 
 class PSTrainer:
@@ -65,6 +72,7 @@ class PSTrainer:
         compute_time: float = 0.05,
         bst_trace: Optional[np.ndarray] = None,
         delivered_trace: Optional[np.ndarray] = None,
+        mask_trace: Optional[np.ndarray] = None,
         seed: int = 0,
         n_ps: int = 1,
     ):
@@ -78,6 +86,9 @@ class PSTrainer:
         self.compute_time = compute_time
         self.bst_trace = bst_trace
         self.delivered_trace = delivered_trace
+        self.mask_trace = (np.asarray(mask_trace, bool)
+                           if mask_trace is not None else None)
+        self._mask_rng = np.random.default_rng(seed + 23)
         key = jax.random.PRNGKey(seed)
         self.params = api.init(key)
         self.opt_state = opt.init(self.params)
@@ -113,38 +124,61 @@ class PSTrainer:
                 return jax.value_and_grad(lambda p: api.loss_fn(p, b))(params)
             return jax.vmap(one)(batch)   # (W,) losses, (W, ...) grads
 
-        def step(params, opt_state, residual, batch, frac, key, lr):
+        def step(params, opt_state, residual, batch, masks, frac, lr):
             losses, grads_w = per_worker_grads(params, batch)
             flat_w = jax.vmap(lambda g: pk.flatten(plan, g))(grads_w)
             if use_ltp:
+                # the PS hot loop: ONE fused masked multi-worker reduction
+                # (kernels.packet_reduce under sync_backend="pallas")
                 if residual is not None:
+                    # error feedback materializes the gated stream anyway —
+                    # gate once (dropfill under pallas), reduce the result
                     flat_w = flat_w + residual
-                keys = jax.random.split(key, w)
-                masks = jax.vmap(
-                    lambda k, f: pk.delivery_mask(plan, k, f)
-                )(keys, frac)                     # (W, n_pkts)
-                sent = flat_w * masks[:, :, None]
-                new_residual = flat_w - sent if residual is not None else None
-                tot = jnp.sum(sent, axis=0)
-                if ltp.compensation == "count":
-                    cnt = jnp.maximum(jnp.sum(masks, axis=0), 1.0)
-                    mean_flat = tot / cnt[:, None]
-                elif ltp.compensation == "expected":
-                    mean_flat = tot / (w * jnp.maximum(jnp.mean(frac), 1e-6))
+                    sent = ls.apply_delivery(
+                        flat_w.reshape(w * plan.n_packets, plan.packet_floats),
+                        masks.reshape(-1), backend=ltp.sync_backend,
+                        interpret=ltp.kernel_interpret,
+                    ).reshape(flat_w.shape)
+                    new_residual = flat_w - sent
+                    mean_flat = ls.reduce_packet_stream(
+                        sent, masks, ltp, w, expected_frac=frac,
+                        premasked=True)
                 else:
-                    mean_flat = tot / w
+                    new_residual = None
+                    mean_flat = ls.reduce_packet_stream(
+                        flat_w, masks, ltp, w, expected_frac=frac)
                 realized = jnp.mean(masks)
             else:
                 mean_flat = jnp.mean(flat_w, axis=0)
                 new_residual = residual
                 realized = jnp.ones(())
-            dtypes = [l.dtype for l in jax.tree_util.tree_leaves(params)]
+            dtypes = [x.dtype for x in jax.tree_util.tree_leaves(params)]
             mean_grads = pk.unflatten(plan, mean_flat, dtypes)
             updates, opt_state = opt.update(mean_grads, opt_state, params, lr)
             params = jax.tree.map(lambda p, u: p + u, params, updates)
             return params, opt_state, new_residual, jnp.mean(losses), realized
 
         return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def _delivery_masks(self, it: int, frac: np.ndarray) -> np.ndarray:
+        """(W, n_packets) float32 per-(worker, packet) delivery mask.
+
+        From the DES ``mask_trace`` when given (the trace's packet stream
+        is tiled/cropped onto the plan's packets), else Bernoulli(frac)
+        per packet. Critical packets are always pinned to 1 — the CQ
+        retransmit guarantee (paper §III-E).
+        """
+        n = self.plan.n_packets
+        if self.mask_trace is not None:
+            m = self.mask_trace[it % len(self.mask_trace)]
+            reps = -(-n // m.shape[1])
+            m = np.tile(m, (1, reps))[:, :n].astype(np.float32)
+        else:
+            m = (self._mask_rng.random((self.w, n))
+                 < np.asarray(frac)[:, None]).astype(np.float32)
+        m[:, self.plan.critical] = 1.0
+        return m
 
     # ------------------------------------------------------------------
     def _transport(self, it: int):
@@ -174,7 +208,6 @@ class PSTrainer:
 
     def run(self, batches, *, epoch_steps: int = 0, eval_fn=None,
             eval_every: int = 0, log_every: int = 0) -> List[Dict]:
-        key = jax.random.PRNGKey(self.train_cfg.seed + 17)
         for batch in batches:
             batch = jax.tree.map(
                 lambda x: jnp.asarray(x).reshape(
@@ -183,11 +216,14 @@ class PSTrainer:
                 batch,
             )
             bst, frac = self._transport(self.step_idx)
-            key, sub = jax.random.split(key)
+            masks = (self._delivery_masks(self.step_idx, frac)
+                     if self.protocol == "ltp"
+                     else np.ones((self.w, self.plan.n_packets), np.float32))
             lr = lr_at(self.train_cfg, self.step_idx, epoch_steps)
             (self.params, self.opt_state, self.residual, loss, realized) = \
                 self._step_fn(self.params, self.opt_state, self.residual,
-                              batch, jnp.asarray(frac, jnp.float32), sub,
+                              batch, jnp.asarray(masks),
+                              jnp.asarray(frac, jnp.float32),
                               jnp.asarray(lr, jnp.float32))
             self.sim_time += self.compute_time + bst
             rec = {

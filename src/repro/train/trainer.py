@@ -12,18 +12,17 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.config import LTPConfig, RunConfig
+from repro.config import LTPConfig
 from repro.core import ltp_sync as ls
 from repro.models.api import ModelApi
-from repro.models.sharding import ShardCtx, dp_axes, param_specs
+from repro.models.sharding import ShardCtx
 from repro.optim import Optimizer
 
 

@@ -1,0 +1,238 @@
+"""Coalesced packet-train engine vs the per-packet reference (DESIGN.md §7).
+
+Two layers of equivalence:
+
+* link level — a same-seed burst through ``Pipe.send_train`` /
+  ``Route.send_train`` is *exactly* the per-packet path: same admitted
+  prefix, same loss draws (the train consumes the RNG stream in per-packet
+  order), same per-packet arrival times, same drop/byte counters. Seeded
+  property tests sweep rate/delay/loss/queue/size.
+
+* scenario level — a coalesced gather is the same *physics* driven by a
+  coarser event clock (acks batch per train), so delivered bytes, drop
+  accounting, and gather completion times match the per-packet run within
+  a tolerance rather than exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig
+from repro.net.scenarios import incast_gather, multi_ps_gather, run_scenario
+from repro.net.simcore import Packet, Pipe, Route, Sim
+
+try:        # property tests run wherever the test extra is installed (CI);
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # the seeded sweeps below cover the seed container
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------------------------
+# link level: exact equivalence
+# ----------------------------------------------------------------------------
+
+
+def _burst_pipe(train: bool, seed: int, n: int, rate: float, delay: float,
+                loss: float, cap: int, size_step: int):
+    sim = Sim()
+    pipe = Pipe(sim, rate, delay, loss, cap, np.random.default_rng(seed))
+    got = []
+    pkts = [Packet(0, i, 800 + (i % max(size_step, 1)) * 31) for i in range(n)]
+    if train:
+        pipe.send_train(pkts, lambda items: got.extend(
+            (p.seq, t) for p, t in items))
+    else:
+        for p in pkts:
+            pipe.send(p, lambda q, s=sim: got.append((q.seq, s.now)))
+    sim.run()
+    stats = (pipe.n_sent, pipe.n_dropped_queue, pipe.n_dropped_loss,
+             pipe.bytes_delivered)
+    return got, stats, sim.n_events
+
+
+def _assert_pipe_equivalent(seed, n, rate, delay, loss, cap, size_step):
+    a, sa, ev_a = _burst_pipe(False, seed, n, rate, delay, loss, cap, size_step)
+    b, sb, ev_b = _burst_pipe(True, seed, n, rate, delay, loss, cap, size_step)
+    assert sa == sb                                   # drops + bytes conserve
+    assert [x[0] for x in a] == [x[0] for x in b]     # same survivors, order
+    np.testing.assert_allclose([x[1] for x in a], [x[1] for x in b],
+                               rtol=1e-12)            # same arrival times
+    assert ev_b <= max(1, ev_a)                       # one event per train
+
+
+def _assert_route_equivalent(seed, n, loss, cap2, rate2_frac):
+    """Two-hop route: the relay carries per-packet hop arrivals as logical
+    enqueue times, so serialization/queueing at the second hop is exact."""
+
+    def run(train: bool):
+        sim = Sim()
+        p1 = Pipe(sim, 1e8, 0.001, loss, 400, np.random.default_rng(seed))
+        p2 = Pipe(sim, 1e8 * rate2_frac, 0.002, loss, cap2,
+                  np.random.default_rng(seed + 1))
+        route = Route([p1, p2])
+        got = []
+        pkts = [Packet(0, i, 1200) for i in range(n)]
+        if train:
+            route.send_train(pkts, lambda items: got.extend(
+                (p.seq, t) for p, t in items))
+        else:
+            for p in pkts:
+                route.send(p, lambda q, s=sim: got.append((q.seq, s.now)))
+        sim.run()
+        return got, (p1.n_dropped_queue, p1.n_dropped_loss,
+                     p2.n_dropped_queue, p2.n_dropped_loss,
+                     p2.bytes_delivered)
+
+    a, sa = run(False)
+    b, sb = run(True)
+    assert sa == sb
+    assert [x[0] for x in a] == [x[0] for x in b]
+    np.testing.assert_allclose([x[1] for x in a], [x[1] for x in b],
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pipe_train_exactly_matches_per_packet_seeded(seed):
+    rng = np.random.default_rng(1000 + seed)
+    _assert_pipe_equivalent(
+        seed=seed,
+        n=int(rng.integers(1, 300)),
+        rate=float(rng.uniform(1e6, 1e10)),
+        delay=float(rng.uniform(0.0, 0.05)),
+        loss=float(rng.uniform(0.0, 0.9)),
+        cap=int(rng.integers(1, 500)),
+        size_step=int(rng.integers(1, 13)),
+    )
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_route_train_exactly_matches_per_packet_seeded(seed):
+    rng = np.random.default_rng(2000 + seed)
+    _assert_route_equivalent(
+        seed=seed,
+        n=int(rng.integers(1, 200)),
+        loss=float(rng.uniform(0.0, 0.5)),
+        cap2=int(rng.integers(5, 200)),
+        rate2_frac=float(rng.uniform(0.2, 1.0)),
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        n=st.integers(1, 300),
+        rate=st.floats(1e6, 1e10),
+        delay=st.floats(0.0, 0.05),
+        loss=st.floats(0.0, 0.9),
+        cap=st.integers(1, 500),
+        size_step=st.integers(1, 13),
+    )
+    def test_pipe_train_exactly_matches_per_packet(seed, n, rate, delay,
+                                                   loss, cap, size_step):
+        _assert_pipe_equivalent(seed, n, rate, delay, loss, cap, size_step)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        n=st.integers(1, 200),
+        loss=st.floats(0.0, 0.5),
+        cap2=st.integers(5, 200),
+        rate2_frac=st.floats(0.2, 1.0),
+    )
+    def test_route_train_exactly_matches_per_packet(seed, n, loss, cap2,
+                                                    rate2_frac):
+        _assert_route_equivalent(seed, n, loss, cap2, rate2_frac)
+
+
+def test_train_conservation_under_mixed_interleaving():
+    """Trains and singles interleaved on one pipe: every packet is exactly
+    one of delivered / queue-dropped / loss-dropped."""
+    sim = Sim()
+    rng = np.random.default_rng(7)
+    pipe = Pipe(sim, 5e7, 0.001, 0.2, 60, rng)
+    delivered = [0]
+    n_sent = 0
+    for round_ in range(30):
+        pkts = [Packet(0, round_ * 100 + i, 1000) for i in range(17)]
+        n_sent += len(pkts)
+        if round_ % 2:
+            pipe.send_train(pkts, lambda items: delivered.__setitem__(
+                0, delivered[0] + len(items)))
+        else:
+            for p in pkts:
+                pipe.send(p, lambda q: delivered.__setitem__(
+                    0, delivered[0] + 1))
+        sim.run()
+    assert delivered[0] + pipe.n_dropped_queue + pipe.n_dropped_loss == n_sent
+    assert delivered[0] * 1000 == pipe.bytes_delivered
+
+
+# ----------------------------------------------------------------------------
+# scenario level: same physics, coarser clock
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario,kw", [
+    ("incast_gather", {"straggler_prob": 0.0}),
+    ("multi_ps_gather", {"n_ps": 2, "straggler_prob": 0.0}),
+    ("straggler_gather", {"slow_rate_mult": 0.5}),
+])
+@pytest.mark.parametrize("protocol", ["ltp", "cubic"])
+def test_gather_coalesced_matches_per_packet(scenario, kw, protocol):
+    net = NetConfig(10, 1, 0.002, 4096)
+    ref = run_scenario(scenario, protocol, net, w=4, size_bytes=4e5,
+                       iters=3, seed=11, coalesce=1, **kw)
+    fast = run_scenario(scenario, protocol, net, w=4, size_bytes=4e5,
+                        iters=3, seed=11, coalesce=16, **kw)
+    bst_ref = np.array([r.bst_gather for r in ref])
+    bst_fast = np.array([r.bst_gather for r in fast])
+    # same completion-time regime: batched acks coarsen the CC clock, so
+    # means agree within 50% and no single round drifts past 3x
+    np.testing.assert_allclose(bst_fast.mean(), bst_ref.mean(), rtol=0.5)
+    ratio = bst_fast / bst_ref
+    assert np.all((ratio > 1 / 3) & (ratio < 3)), ratio
+    # delivered fractions stay in the same band
+    d_ref = np.mean([r.delivered.mean() for r in ref])
+    d_fast = np.mean([r.delivered.mean() for r in fast])
+    assert abs(d_ref - d_fast) < 0.15
+    for r in fast:
+        assert r.packets_received <= r.packets_expected
+        if protocol == "cubic":
+            assert r.packets_received == r.packets_expected
+        else:
+            assert r.criticals_ok
+
+
+def test_coalesced_gather_cuts_events():
+    from repro.net import simcore
+
+    net = NetConfig(10, 1, 0.001, 4096)
+
+    def events(coalesce):
+        simcore.PERF.reset()
+        incast_gather("ltp", net, 4, 5e5, iters=2, seed=5,
+                      straggler_prob=0.0, coalesce=coalesce)
+        return simcore.PERF.events, simcore.PERF.packets
+
+    ev1, pk1 = events(1)
+    ev16, pk16 = events(16)
+    assert ev16 < ev1 / 4           # >=4x fewer heap events
+    assert pk16 > 0.5 * pk1         # while moving comparable traffic
+
+
+def test_gather_masks_shape_and_consistency():
+    """GatherResult.masks is (n_ps, W, n) and its mean equals the reported
+    delivered fractions."""
+    net = NetConfig(10, 1, 0.0, 4096)
+    ltp = LTPConfig(data_pct_threshold=0.7)
+    rs = multi_ps_gather("ltp", net, 4, 4e5, n_ps=2, iters=2, ltp=ltp,
+                         seed=2, straggler_prob=0.5, straggler_scale=1.0,
+                         coalesce=8)
+    for r in rs:
+        assert r.masks is not None and r.masks.ndim == 3
+        n_ps, w, n = r.masks.shape
+        assert (n_ps, w) == (2, 4) and n > 0
+        np.testing.assert_allclose(r.masks.mean(axis=(0, 2)), r.delivered,
+                                   atol=1e-9)

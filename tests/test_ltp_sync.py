@@ -1,6 +1,5 @@
 """LTP gradient-sync semantics: shard_map v1 (packet-local), leafwise v2,
 PSTrainer vmapped path — equivalences and compensation properties."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.config import LTPConfig
 from repro.core import make_ltp_sync
 from repro.core import ltp_sync as ls
 from repro.core import packets as pk

@@ -2,12 +2,8 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
 from repro.config import LTPConfig, NetConfig
-from repro.net import senders as snd
-from repro.net.ltp_receiver import LTPFlowReceiver, PSGatherReceiver
+from repro.net.ltp_receiver import LTPFlowReceiver
 from repro.net.scenarios import (
     fairness_share, incast_gather, p2p_transfer,
 )

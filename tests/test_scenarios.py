@@ -16,7 +16,6 @@ from repro.core.early_close import (
 )
 from repro.net.scenarios import (
     PROTOCOLS,
-    SCENARIOS,
     cross_traffic,
     incast_gather,
     list_scenarios,

@@ -1,6 +1,5 @@
 """Substrate tests: optimizers, data pipeline, checkpointing, compression,
 HLO walker, PSTrainer integration."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,8 @@ import os
 import sys
 from typing import Dict, List, Tuple
 
-DEFAULT_FILES = ("BENCH_netsim.json", "BENCH_kernels.json")
+DEFAULT_FILES = ("BENCH_netsim.json", "BENCH_kernels.json",
+                 "BENCH_runtime.json")
 
 #: metric-name suffix -> direction ("up" = bigger is better)
 RULES: Tuple[Tuple[str, str], ...] = (

@@ -44,8 +44,10 @@ def run(quick: bool = True):
             rows.append({
                 "loss": loss, "protocol": proto,
                 "final_acc": round(evals[-1][1], 4) if evals else None,
-                "tta_s_to_{:.2f}".format(target):
-                    round(tta, 1) if tta else "not_reached",
+                # fixed key + explicit target column so sweep aggregation
+                # and regression tooling can parse rows uniformly
+                "tta_s": round(tta, 1) if tta else "not_reached",
+                "target": target,
                 "final_loss": round(hist[-1]["loss"], 4),
                 "delivered": round(float(np.mean([h["delivered"] for h in hist])), 3),
                 "total_sim_time_s": round(tr.sim_time, 1),

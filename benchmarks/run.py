@@ -21,6 +21,7 @@ from benchmarks import (
     fig15_fairness,
     kernel_bench,
     roofline,
+    runtime_sweep,
     sweep_scenarios,
 )
 
@@ -34,6 +35,7 @@ MODULES = {
     "roofline": roofline,
     "scenario_sweep": sweep_scenarios,
     "kernel_bench": kernel_bench,
+    "runtime_sweep": runtime_sweep,
 }
 
 

@@ -1,0 +1,136 @@
+"""Cluster-runtime sweep: aggregation policy x protocol x cluster size
+under the lognormal straggler compute model (DESIGN.md §8).
+
+Each cell runs the event-driven ``ClusterRuntime`` on the tiny papernet
+over heterogeneous workers (lognormal jitter + occasional 5x straggler)
+and reports simulated time per iteration, staleness, Early Close
+activity, and blocked time. The grid is where the paper's barrier story
+becomes measurable: bsp pays the per-iteration max over workers, while
+async/ssp overlap the stragglers — their sim-time speedups over bsp on
+the same seed are the acceptance metrics.
+
+Two gate metrics land in ``BENCH_runtime.json`` (diffed by
+``benchmarks.check_regression`` in CI):
+
+  runtime_async_vs_bsp_speedup / runtime_ssp_vs_bsp_speedup
+      simulated-time ratio bsp/policy at the largest swept cluster
+      (machine-independent: every stream is seeded);
+  runtime_des_events_per_sec
+      packet-level co-simulation throughput of one DES cell.
+
+  PYTHONPATH=src python -m benchmarks.runtime_sweep --quick
+  PYTHONPATH=src python -m benchmarks.run --only runtime_sweep
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net import simcore
+from repro.optim import make_optimizer
+from repro.runtime import ClusterRuntime, LognormalStragglerCompute
+
+from benchmarks.common import emit
+from benchmarks.sweep_scenarios import write_bench
+
+POLICIES = ("bsp", "async", "ssp")
+PROTOCOLS = ("ltp", "cubic")
+SSP_K = 2
+
+#: the straggler model every cell shares — heavy enough that the barrier
+#: penalty is unambiguous, seeded so the sweep is reproducible
+COMPUTE_KW = dict(sigma=0.3, straggler_prob=0.15, straggler_mult=5.0)
+
+
+def _cell(api, tc, net, w, policy, proto, steps, *, transport="analytic",
+          seed=11):
+    data = SyntheticCIFAR(seed=3)
+    kw = {"policy_kw": {"staleness": SSP_K}} if policy == "ssp" else {}
+    compute = LognormalStragglerCompute(w, base=0.05, seed=seed,
+                                        **COMPUTE_KW)
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), net,
+        n_workers=w, protocol=proto, policy=policy,
+        compute_model=compute, compute_time=0.05, seed=seed,
+        transport=transport, **kw)
+    simcore.PERF.reset()
+    t0 = time.time()
+    rt.run(batches(data, tc.batch, steps), epoch_steps=max(1, steps // 2))
+    wall = time.time() - t0
+    s = rt.tel.summary()
+    row = {
+        "scenario": f"runtime_w{w}", "policy": policy, "protocol": proto,
+        "transport": transport,
+        "simtime_s": round(rt.sim_time, 4),
+        "simtime_per_iter_ms": round(rt.sim_time / steps * 1e3, 2),
+        "wall_s": round(wall, 2),
+        "staleness_max": s["staleness_max"],
+        "staleness_mean": s["staleness_mean"],
+        "n_early_close": s["n_early_close"],
+        "n_stale_drops": s["n_stale_drops"],
+        "blocked_s": s["blocked_s"],
+    }
+    if transport == "des":
+        row["events_per_sec"] = round(
+            simcore.PERF.packets / max(wall, 1e-9))
+    return row
+
+
+def run(quick: bool = True):
+    sizes = (8, 16) if quick else (8, 32, 64)
+    steps = 8 if quick else 16
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    net = NetConfig(10, 1, 0.001, 4096)
+    rows = []
+    metrics = {"runtime_ssp_k": SSP_K}
+    t_start = time.time()
+    for w in sizes:
+        tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+        cell = {}
+        for policy in POLICIES:
+            for proto in PROTOCOLS:
+                row = _cell(api, tc, net, w, policy, proto, steps)
+                cell[(policy, proto)] = row["simtime_s"]
+                rows.append(row)
+        for policy in ("async", "ssp"):
+            for proto in PROTOCOLS:
+                sp = round(cell[("bsp", proto)] / cell[(policy, proto)], 3)
+                metrics[f"runtime_w{w}_{policy}_{proto}_vs_bsp"] = sp
+    # acceptance metrics: largest swept cluster, both policies, ltp
+    w_top = sizes[-1]
+    metrics["runtime_async_vs_bsp_speedup"] = \
+        metrics[f"runtime_w{w_top}_async_ltp_vs_bsp"]
+    metrics["runtime_ssp_vs_bsp_speedup"] = \
+        metrics[f"runtime_w{w_top}_ssp_ltp_vs_bsp"]
+    # one packet-level co-simulation cell: DES throughput under the gate
+    tc = TrainConfig(batch=4 * sizes[0], lr=0.05, steps=max(2, steps // 4))
+    des_row = _cell(api, tc, net, sizes[0], "bsp", "ltp",
+                    max(2, steps // 4), transport="des")
+    rows.append(des_row)
+    metrics["runtime_des_events_per_sec"] = des_row["events_per_sec"]
+    metrics["runtime_sweep_wall_s"] = round(time.time() - t_start, 3)
+    write_bench(metrics, quick, "BENCH_runtime.json")
+    emit(rows, "runtime_sweep")
+    speed_a = metrics["runtime_async_vs_bsp_speedup"]
+    speed_s = metrics["runtime_ssp_vs_bsp_speedup"]
+    print(f"async vs bsp: {speed_a}x | ssp(k={SSP_K}) vs bsp: {speed_s}x "
+          f"(sim-time, w={w_top}, lognormal stragglers)")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid (default: full)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

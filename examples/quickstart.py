@@ -20,12 +20,12 @@ from repro.optim import make_optimizer
 from repro.train import PSTrainer
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--loss-rate", type=float, default=0.001)
     ap.add_argument("--workers", type=int, default=8)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config("papernet").replace(d_model=16)
     api = build(cfg)
@@ -36,6 +36,8 @@ def main():
                     loss_rate=args.loss_rate, queue_pkts=4096)
 
     print(f"== papernet on {args.workers} workers, loss={args.loss_rate} ==")
+    # short smoke runs (CI) still get at least one eval at the end
+    eval_every = max(1, min(20, args.steps))
     results = {}
     for proto in ["ltp", "cubic"]:
         print(f"\n--- protocol: {proto} ---")
@@ -43,8 +45,8 @@ def main():
                        n_workers=args.workers, protocol=proto,
                        compute_time=0.05, seed=0)
         tr.run(batches(data, tc.batch, tc.steps), epoch_steps=20,
-               eval_fn=lambda p: accuracy(cfg, p, test), eval_every=20,
-               log_every=10)
+               eval_fn=lambda p: accuracy(cfg, p, test),
+               eval_every=eval_every, log_every=10)
         results[proto] = tr
     print("\n== summary ==")
     for proto, tr in results.items():

@@ -129,6 +129,12 @@ class LTPConfig:
     # progress 1 (late training tolerates less gradient loss). None
     # disables the ramp — the paper's fixed threshold.
     phase_final_pct_threshold: Optional[float] = None
+    # Staleness-aware compensation weighting (beyond-paper, DESIGN.md §8):
+    # under async / bounded-staleness aggregation a worker's contribution
+    # to the PS reduction is damped by 1 / (1 + staleness_comp * s) where
+    # s is the gradient's staleness in iterations. 0 disables damping
+    # (every admitted gradient weighs 1, the classic SSP reduction).
+    staleness_comp: float = 0.0
     error_feedback: bool = False     # beyond-paper
     critical_per_tensor: int = 1     # first/last packet(s) of each tensor marked critical
     # PS-side aggregation backend (DESIGN.md §7): "python" is the jnp

@@ -69,10 +69,22 @@ def apply_delivery(packets, mask, scale=None, *, backend: str = "python",
     return packets * gate[:, None].astype(packets.dtype)
 
 
+def staleness_weights(staleness, damping: float) -> np.ndarray:
+    """(W,) contribution weights for gradients ``staleness`` iterations
+    old: 1 / (1 + damping * s) — the staleness-aware damping the
+    async/SSP aggregation policies feed to ``reduce_packet_stream`` as
+    ``worker_weights`` (DESIGN.md §8). The coefficient comes from
+    ``LTPConfig.staleness_comp`` (or a policy override); 0 gives the
+    identity (every admitted gradient weighs 1). This is THE damping
+    law — policies call it rather than re-deriving it."""
+    s = np.asarray(staleness, np.float32)
+    return 1.0 / (1.0 + float(damping) * np.maximum(s, 0.0))
+
+
 def reduce_packet_stream(packets_w, masks_w, ltp: LTPConfig, n_workers: int,
                          *, expected_frac=None, backend: Optional[str] = None,
                          interpret: Optional[bool] = None,
-                         premasked: bool = False):
+                         premasked: bool = False, worker_weights=None):
     """The PS-side hot loop: one fused masked multi-worker reduction.
 
     packets_w: (W, n_packets, payload); masks_w: (W, n_packets) {0,1}.
@@ -89,10 +101,20 @@ def reduce_packet_stream(packets_w, masks_w, ltp: LTPConfig, n_workers: int,
     by ``masks_w`` (the error-feedback path materializes the masked
     stream anyway): the python backend skips the multiply; the pallas
     kernel re-applies the {0,1} mask, which is idempotent.
+
+    ``worker_weights`` ((W,) float, optional) damps each worker's
+    contribution — staleness-aware compensation under async/SSP
+    aggregation (DESIGN.md §8). A weight multiplies the worker's gradient
+    exactly as per-contribution learning-rate damping would, so it
+    composes identically with every compensation mode and both backends
+    (the stream is pre-scaled before the fused reduction).
     """
     backend = backend or ltp.sync_backend
     interpret = ltp.kernel_interpret if interpret is None else interpret
     comp = ltp.compensation
+    if worker_weights is not None:
+        w_ = jnp.asarray(worker_weights, jnp.float32)
+        packets_w = packets_w * w_[:, None, None]
     if backend == "pallas":
         out = kops.ltp_packet_reduce(
             packets_w, masks_w,

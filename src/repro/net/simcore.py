@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -72,7 +73,13 @@ class Packet:
 
 
 class Sim:
-    """Event loop. Callbacks run at monotonically nondecreasing times."""
+    """Event loop. Callbacks run at monotonically nondecreasing times.
+
+    ``truncated`` flips to True when a ``run`` stops on ``max_events``
+    with work still pending — a co-simulation cut off mid-scenario must
+    not masquerade as a converged run (callers check the flag; a
+    ``RuntimeWarning`` fires too, so silent truncation is impossible).
+    """
 
     def __init__(self):
         self.now = 0.0
@@ -80,6 +87,7 @@ class Sim:
         self._ids = itertools.count()
         self.cancelled: set = set()
         self.n_events = 0
+        self.truncated = False
 
     def at(self, t: float, fn: Callable[[], None]) -> int:
         eid = next(self._ids)
@@ -91,6 +99,28 @@ class Sim:
 
     def cancel(self, eid: int) -> None:
         self.cancelled.add(eid)
+
+    def every(self, dt: float, fn: Callable[[], None],
+              until: float = float("inf")) -> Callable[[], None]:
+        """Periodic actor hook: run ``fn`` every ``dt`` seconds of sim
+        time starting at ``now + dt`` (telemetry samplers, watchdogs).
+        Returns a zero-argument canceller."""
+        state = {"eid": None, "stopped": False}
+
+        def tick():
+            if state["stopped"] or self.now > until:
+                return
+            fn()
+            state["eid"] = self.after(dt, tick)
+
+        state["eid"] = self.after(dt, tick)
+
+        def cancel_hook():
+            state["stopped"] = True
+            if state["eid"] is not None:
+                self.cancel(state["eid"])
+
+        return cancel_hook
 
     def run(self, until: float = float("inf"), max_events: int = 100_000_000):
         n = 0
@@ -105,6 +135,13 @@ class Sim:
             self.now = t
             fn()
             n += 1
+        if n >= max_events and self._heap:
+            self.truncated = True
+            warnings.warn(
+                f"Sim.run stopped on max_events={max_events} with "
+                f"{len(self._heap)} events pending at t={self.now:.6f}s — "
+                f"results are truncated, not converged",
+                RuntimeWarning, stacklevel=2)
         self.n_events += n
         PERF.events += n
         return n
@@ -324,6 +361,13 @@ class Topology:
     def group_pipes(self, group: str) -> List[Pipe]:
         return [self.pipes[n] for n in self.groups.get(group, [])]
 
+    def queue_depths(self, group: Optional[str] = None) -> Dict[str, float]:
+        """Per-pipe instantaneous queue depth in packets (actor hook:
+        telemetry samplers attach via ``Sim.every`` and snapshot this)."""
+        names = (self.groups.get(group, []) if group is not None
+                 else list(self.pipes))
+        return {n: self.pipes[n].queue_len() for n in names}
+
     def stats(self) -> Dict[str, Dict[str, float]]:
         """Per-group totals: sent/dropped/delivered-bytes."""
         out: Dict[str, Dict[str, float]] = {}
@@ -374,6 +418,8 @@ class CrossTrafficSource:
         self.n_delivered = 0
         self._seq = 0
         self._stopped = False
+        self._running = False
+        self._gen = 0          # burst-chain generation (restart safety)
 
     @property
     def offered_bps(self) -> float:
@@ -381,13 +427,25 @@ class CrossTrafficSource:
         return self.load * self.duty * self.pipe.rate
 
     def start(self) -> None:
-        self._burst()
+        """Begin injecting. Idempotent: a second ``start`` on a running
+        source is a no-op (no doubled burst chains); ``start`` after
+        ``stop`` resumes from a fresh burst."""
+        if self._running:
+            return
+        self._stopped = False
+        self._running = True
+        self._gen += 1         # orphan any pending chain from a prior life
+        self._burst(self._gen)
 
     def stop(self) -> None:
+        """Cease injecting (idempotent). Pending burst events become
+        no-ops; already-enqueued packets still drain through the pipe."""
         self._stopped = True
+        self._running = False
 
-    def _burst(self) -> None:
-        if self._stopped or self.load <= 0:
+    def _burst(self, gen: Optional[int] = None) -> None:
+        gen = self._gen if gen is None else gen
+        if self._stopped or gen != self._gen or self.load <= 0:
             return
         on = self.rng.exponential(self.on_mean)
         gap = self.pkt_bytes * 8.0 / (self.load * self.pipe.rate)
@@ -399,16 +457,17 @@ class CrossTrafficSource:
             # interleaving; DESIGN.md §7)
             for start in range(0, n, self.train_len):
                 k = min(self.train_len, n - start)
-                self.sim.after(start * gap,
-                               lambda k=k, gap=gap: self._inject_train(k, gap))
+                self.sim.after(
+                    start * gap,
+                    lambda k=k, gap=gap: self._inject_train(k, gap, gen))
         else:
             for i in range(n):
-                self.sim.after(i * gap, self._inject)
+                self.sim.after(i * gap, lambda: self._inject(gen))
         off = self.rng.exponential(self.off_mean)
-        self.sim.after(on + off, self._burst)
+        self.sim.after(on + off, lambda: self._burst(gen))
 
-    def _inject(self) -> None:
-        if self._stopped:
+    def _inject(self, gen: Optional[int] = None) -> None:
+        if self._stopped or (gen is not None and gen != self._gen):
             return
         self._seq += 1
         self.n_injected += 1
@@ -416,8 +475,9 @@ class CrossTrafficSource:
                      meta={"cross": True})
         self.pipe.send(pkt, self._sink)
 
-    def _inject_train(self, k: int, gap: float) -> None:
-        if self._stopped:
+    def _inject_train(self, k: int, gap: float,
+                      gen: Optional[int] = None) -> None:
+        if self._stopped or (gen is not None and gen != self._gen):
             return
         now = self.sim.now
         pkts = []

@@ -1,0 +1,25 @@
+"""Event-driven cluster runtime: compute/network co-simulation with
+pluggable PS aggregation policies (DESIGN.md §8)."""
+from repro.runtime.compute import (  # noqa: F401
+    COMPUTE_MODELS,
+    ComputeModel,
+    DeterministicCompute,
+    LognormalStragglerCompute,
+    TraceCompute,
+    make_compute_model,
+)
+from repro.runtime.policies import (  # noqa: F401
+    POLICIES,
+    AggregationPolicy,
+    AsyncPolicy,
+    BSPPolicy,
+    PendingGrad,
+    SSPPolicy,
+    make_policy,
+)
+from repro.runtime.runtime import ClusterRuntime  # noqa: F401
+from repro.runtime.telemetry import Telemetry  # noqa: F401
+from repro.runtime.transport import (  # noqa: F401
+    AnalyticPerWorkerNet,
+    DESTransport,
+)

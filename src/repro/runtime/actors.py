@@ -1,0 +1,112 @@
+"""Worker / PS actors on the runtime's shared event clock (DESIGN.md §8).
+
+A ``WorkerActor`` is the per-worker state machine: (policy gate) ->
+fetch params -> compute (sampled from the compute model) -> hand the
+gradient to the transport -> immediately attempt the next iteration.
+Whether that attempt proceeds is the aggregation policy's call — bsp
+blocks until the barrier commits, ssp blocks when the worker runs too
+far ahead, async never blocks.
+
+The ``PSActor`` is the admission side: every arriving gradient goes
+through the policy, ready batches are folded into the model by the
+runtime (which owns the JAX state), and too-stale arrivals are counted
+out. Both actors only *schedule*; all numerical work lives in
+``ClusterRuntime``.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.runtime.policies import PendingGrad
+
+if TYPE_CHECKING:
+    from repro.runtime.runtime import ClusterRuntime
+
+
+class WorkerActor:
+    def __init__(self, rt: "ClusterRuntime", idx: int):
+        self.rt = rt
+        self.idx = idx
+        self.it = 0
+        self.blocked = False
+        self.busy = False      # a compute event for self.it is in flight
+        self.params_version = 0
+        self.params_snap = None
+        self.finished = False
+
+    def start(self) -> None:
+        self._try_begin()
+
+    def _try_begin(self) -> None:
+        rt = self.rt
+        if self.busy or self.finished:
+            return   # wake paths may overlap; one compute per iteration
+        if self.it >= rt.steps:
+            if self.blocked:
+                self.blocked = False
+                rt._blocked.discard(self.idx)
+                rt.tel.record("unblock", rt.sim.now, worker=self.idx,
+                              iteration=self.it)
+            if not self.finished:
+                self.finished = True
+                rt.on_worker_finished(self.idx)
+            return
+        if not rt.policy.may_start(self.idx, self.it):
+            if not self.blocked:
+                self.blocked = True
+                rt._blocked.add(self.idx)
+                rt.tel.record("block", rt.sim.now, worker=self.idx,
+                              iteration=self.it)
+            return
+        if self.blocked:
+            self.blocked = False
+            rt._blocked.discard(self.idx)
+            rt.tel.record("unblock", rt.sim.now, worker=self.idx,
+                          iteration=self.it)
+        rt.policy.on_start(self.idx, self.it)
+        self.params_version, self.params_snap = rt.visible_params()
+        dt = rt.compute.sample(self.idx, self.it)
+        it = self.it
+        rt.tel.record("compute_start", rt.sim.now, worker=self.idx,
+                      iteration=it, dt=dt)
+        self.busy = True
+        rt.sim.after(dt, lambda: self._grad_ready(it))
+        # starting an iteration advances this worker's clock, which may
+        # release SSP peers parked on the staleness bound
+        rt.wake_blocked(exclude=self.idx)
+
+    def _grad_ready(self, it: int) -> None:
+        rt = self.rt
+        self.busy = False
+        rt.tel.record("grad_ready", rt.sim.now, worker=self.idx, iteration=it)
+        rt.on_grad_ready(self, it)
+        self.it = it + 1
+        self._try_begin()
+
+
+class PSActor:
+    """Admission + flush loop over the aggregation policy."""
+
+    def __init__(self, rt: "ClusterRuntime"):
+        self.rt = rt
+
+    def on_arrival(self, g: PendingGrad) -> None:
+        rt = self.rt
+        rt.tel.record("grad_arrived", rt.sim.now, worker=g.worker,
+                      iteration=g.iteration, staleness=g.staleness,
+                      delivered=float(g.payload["frac"]))
+        rt.policy.on_arrival(g)
+        rt.tel.record("queue", rt.sim.now, depth=rt.policy.pending_count(),
+                      **rt.net_queue_sample())
+        self.flush()
+
+    def flush(self) -> None:
+        rt = self.rt
+        for g in rt.policy.drained_stale():
+            rt.tel.record("stale_drop", rt.sim.now, worker=g.worker,
+                          iteration=g.iteration, staleness=g.staleness)
+        batch = rt.policy.ready()
+        while batch:
+            rt.apply_batch(batch)
+            batch = rt.policy.ready()
+        rt.maybe_finish()

@@ -1,0 +1,544 @@
+"""ClusterRuntime — event-driven compute/network co-simulation of the
+PS training cluster (DESIGN.md §8).
+
+One shared ``Sim`` clock carries everything: per-worker compute times
+(``runtime.compute``), the transport leg (analytic per-flow timing or
+the packet-level DES in ``runtime.transport``), and the PS-side
+aggregation policy (``runtime.policies``). The JAX state (params,
+optimizer, packet plan, kernel-backed reductions) lives here; actors and
+policies only schedule.
+
+Execution paths:
+
+* ``policy="bsp"`` — barrier semantics. The runtime runs the SAME fused
+  jitted step as the legacy lockstep ``PSTrainer`` on the SAME
+  Early-Close controller and delivery-mask RNG streams, so with the
+  default deterministic compute model a bsp run reproduces the legacy
+  loop record-for-record (tests/test_runtime.py pins this).
+* ``policy="async" | "ssp"`` — apply-on-arrival. Each worker's gradient
+  is computed against the params version that worker actually fetched
+  (so staleness is real, not simulated), gated per-gradient through the
+  error-feedback/delivery machinery, and folded in by
+  ``reduce_packet_stream`` with the policy's staleness-damped weights.
+
+Truncation safety: if the event loop stops on ``max_events`` mid-run the
+runtime raises instead of returning a partial history.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.core import packets as pk
+from repro.core.early_close import (
+    AnalyticIncastModel,
+    MultiPSEarlyClose,
+    broadcast_time,
+)
+from repro.models.api import ModelApi
+from repro.net.scenarios import GatherSpec
+from repro.net.simcore import Sim
+from repro.optim import Optimizer, lr_at
+from repro.runtime import step as stp
+from repro.runtime.actors import PSActor, WorkerActor
+from repro.runtime.compute import ComputeModel, make_compute_model
+from repro.runtime.policies import (
+    AggregationPolicy,
+    AsyncPolicy,
+    BSPPolicy,
+    PendingGrad,
+    SSPPolicy,
+    make_policy,
+)
+from repro.runtime.telemetry import Telemetry
+from repro.runtime.transport import AnalyticPerWorkerNet, DESTransport
+
+
+class _BSPRound:
+    """One in-flight barrier iteration (bsp only)."""
+
+    __slots__ = ("iteration", "ready", "gather", "t_first", "done")
+
+    def __init__(self, iteration: int):
+        self.iteration = iteration
+        self.ready: set = set()
+        self.gather = None          # _DESBarrierGather under transport="des"
+        self.t_first: Optional[float] = None
+        self.done = 0               # completed reliable flows (non-ltp DES)
+
+
+class ClusterRuntime:
+    def __init__(
+        self,
+        api: ModelApi,
+        opt: Optimizer,
+        train: TrainConfig,
+        ltp: LTPConfig,
+        net: NetConfig,
+        n_workers: int = 8,
+        protocol: str = "ltp",
+        policy="bsp",
+        policy_kw: Optional[dict] = None,
+        compute_model=None,
+        compute_time: float = 0.05,
+        n_ps: int = 1,
+        seed: int = 0,
+        transport: str = "analytic",
+        spec: Optional[GatherSpec] = None,
+        coalesce: int = 1,
+        telemetry: bool = True,
+        params=None,
+        opt_state=None,
+    ):
+        if transport not in ("analytic", "des"):
+            raise ValueError(f"unknown transport {transport!r}")
+        self.api = api
+        self.opt = opt
+        self.train_cfg = train
+        self.ltp = ltp
+        self.net = net
+        self.w = n_workers
+        self.protocol = protocol
+        self.n_ps = n_ps
+        self.seed = seed
+        self.transport = transport
+        self.sim = Sim()
+        self.tel = Telemetry(telemetry)
+        self.policy: AggregationPolicy = make_policy(policy,
+                                                     **(policy_kw or {}))
+        # LTPConfig.staleness_comp governs the damping law for BOTH
+        # apply-on-arrival policies unless the instance overrides it
+        if isinstance(self.policy, SSPPolicy) \
+                and self.policy.staleness_comp == 0:
+            self.policy.staleness_comp = ltp.staleness_comp
+        if isinstance(self.policy, AsyncPolicy) and self.policy.damping is None:
+            self.policy.damping = ltp.staleness_comp
+        self.policy.bind(n_workers)
+        self.compute: ComputeModel = make_compute_model(
+            compute_model, n_workers, base=compute_time, seed=seed)
+
+        key = jax.random.PRNGKey(seed)
+        self.params = api.init(key) if params is None else params
+        self.opt_state = opt.init(self.params) if opt_state is None \
+            else opt_state
+        self.plan = pk.make_plan(self.params, ltp.packet_floats,
+                                 ltp.critical_per_tensor)
+        self.model_bytes = self.plan.n_floats * 4
+        self.residual = (
+            jnp.zeros((n_workers, self.plan.n_packets,
+                       self.plan.packet_floats))
+            if ltp.error_feedback else None)
+
+        # legacy-parity RNG/controller streams (bsp path; seeds match
+        # the lockstep PSTrainer exactly)
+        self._mask_rng = np.random.default_rng(seed + 23)
+        self.controller = MultiPSEarlyClose(ltp, net, n_workers,
+                                            self.model_bytes, n_ps=n_ps)
+        self.gather_models = [
+            AnalyticIncastModel(net, n_workers, protocol=protocol,
+                                seed=seed + 1 + 1000 * p)
+            for p in range(n_ps)
+        ]
+        # async/ssp streams (separate, so they cannot perturb bsp parity)
+        self._amask_rng = np.random.default_rng(seed + 29)
+
+        self.net_des: Optional[DESTransport] = None
+        self.anet: Optional[AnalyticPerWorkerNet] = None
+        if transport == "des":
+            self.net_des = DESTransport(
+                self.sim, net, ltp, protocol, n_workers, self.model_bytes,
+                n_ps=n_ps, spec=spec, seed=seed, coalesce=coalesce,
+                on_early_close=lambda shard, t, d: self.tel.record(
+                    "early_close", t, shard=shard, delivered=d))
+        else:
+            self.anet = AnalyticPerWorkerNet(
+                self.sim, net, ltp, protocol, n_workers, self.model_bytes,
+                seed=seed)
+
+        # jitted machinery, built lazily per execution path
+        self._fused_step = None
+        self._grad_fn = None
+        self._apply_fn = None
+        self._ef_gate = None
+
+        self.ps = PSActor(self)
+        self.workers: List[WorkerActor] = []
+        self._blocked: set = set()
+        self._bsp_round: Optional[_BSPRound] = None
+        self._inflight = 0
+        self._n_finished = 0
+        self._visible = (0, self.params)
+        self.version = 0                 # PS apply counter
+        self.max_applied_iter = -1
+        self.sim_time = 0.0
+        self.step_idx = 0                # committed bsp iterations
+        self.history: List[Dict] = []
+        self._stopped = False
+        self._batches: List = []
+        self.steps = 0
+        self._eval_fn = None
+        self._eval_every = 0
+        self._epoch_steps = 0
+        self._log_every = 0
+
+    # ------------------------------------------------------------------
+    # params visibility (the broadcast leg)
+    # ------------------------------------------------------------------
+    def visible_params(self):
+        return self._visible
+
+    def _publish(self, version: int, params) -> None:
+        delay = broadcast_time(self.net, self.model_bytes, n_ps=self.n_ps)
+
+        def set_visible():
+            if version > self._visible[0]:
+                self._visible = (version, params)
+            self.wake_blocked()
+
+        self.sim.after(delay, set_visible)
+
+    # ------------------------------------------------------------------
+    # worker events
+    # ------------------------------------------------------------------
+    def wake_blocked(self, exclude: Optional[int] = None) -> None:
+        for idx in sorted(self._blocked):
+            if idx != exclude:
+                self.workers[idx]._try_begin()
+
+    def _worker_batch(self, worker: int, it: int):
+        return jax.tree.map(lambda x: x[worker], self._shaped_batch(it))
+
+    def _shaped_batch(self, it: int):
+        b = self._batches[it]
+        return jax.tree.map(
+            lambda x: jnp.asarray(x).reshape(
+                (self.w, x.shape[0] // self.w) + x.shape[1:]),
+            b,
+        )
+
+    def on_grad_ready(self, actor: WorkerActor, it: int) -> None:
+        if isinstance(self.policy, BSPPolicy):
+            self._bsp_grad_ready(actor.idx, it)
+            return
+        # async/ssp: the gradient is computed against the params snapshot
+        # this worker fetched — staleness is real
+        if self._grad_fn is None:
+            self._grad_fn = stp.build_worker_grad_fn(self.api, self.plan)
+        loss, flat = self._grad_fn(actor.params_snap,
+                                   self._worker_batch(actor.idx, it))
+        self._inflight += 1
+        worker = actor.idx
+
+        if self.net_des is not None:
+            def on_delivered(masks_ps, frac, early, worker=worker, it=it,
+                             loss=loss, flat=flat):
+                stream = np.concatenate(list(masks_ps))
+                row = stp.tile_mask_onto_plan(self.plan, stream)
+                if early:
+                    self.tel.record("early_close", self.sim.now,
+                                    worker=worker, iteration=it,
+                                    delivered=float(frac))
+                self._deliver(worker, it, loss, flat, row, float(frac))
+
+            self.net_des.send(worker, on_delivered)
+        else:
+            def on_close(frac, early, worker=worker, it=it, loss=loss,
+                         flat=flat):
+                if self.protocol == "ltp":
+                    row = (self._amask_rng.random(self.plan.n_packets)
+                           < frac).astype(np.float32)
+                    row[self.plan.critical] = 1.0
+                else:
+                    row = np.ones(self.plan.n_packets, np.float32)
+                if early:
+                    self.tel.record("early_close", self.sim.now,
+                                    worker=worker, iteration=it,
+                                    delivered=float(frac))
+                self._deliver(worker, it, loss, flat, row, float(frac))
+
+            self.anet.send(worker, on_close)
+
+    def _deliver(self, worker: int, it: int, loss, flat, mask_row: np.ndarray,
+                 frac: float) -> None:
+        self._inflight -= 1
+        g = PendingGrad(
+            worker=worker, iteration=it, t_ready=self.sim.now,
+            staleness=max(0, self.max_applied_iter - it),
+            payload={"loss": loss, "flat": flat,
+                     "mask": jnp.asarray(mask_row), "frac": frac})
+        self.ps.on_arrival(g)
+
+    def on_worker_finished(self, idx: int) -> None:
+        self._n_finished += 1
+        self.maybe_finish()
+
+    def net_queue_sample(self) -> Dict[str, float]:
+        if self.net_des is not None:
+            return {"net_depth": self.net_des.queue_depth_pkts()}
+        return {}
+
+    # ------------------------------------------------------------------
+    # bsp barrier path (legacy-parity)
+    # ------------------------------------------------------------------
+    def _bsp_grad_ready(self, worker: int, it: int) -> None:
+        rnd = self._bsp_round
+        if rnd is None or rnd.iteration != it:
+            rnd = self._bsp_round = _BSPRound(it)
+            rnd.t_first = self.sim.now
+            if self.net_des is not None and self.protocol == "ltp":
+                rnd.gather = self.net_des.start_gather(self._bsp_des_closed)
+        rnd.ready.add(worker)
+        if self.net_des is None:
+            if len(rnd.ready) == self.w:
+                self._bsp_analytic_close(rnd)
+        elif self.protocol == "ltp":
+            rnd.gather.add_worker(worker)
+        else:
+            # reliable protocols: W independent flows; the barrier closes
+            # when the last byte of the last flow lands
+            def on_flow(masks_ps, frac, early, rnd=rnd):
+                rnd.done += 1
+                if rnd.done == self.w:
+                    masks = np.ones((self.w, self.plan.n_packets),
+                                    np.float32)
+                    close = self.sim.now - rnd.t_first
+                    bst = close + broadcast_time(
+                        self.net, self.model_bytes, n_ps=self.n_ps)
+                    self._bsp_commit(rnd, masks, np.ones(self.w), bst)
+
+            self.net_des.send(worker, on_flow)
+
+    def _bsp_analytic_close(self, rnd: _BSPRound) -> None:
+        """All grads ready: sample the transport models and the Early
+        Close controller exactly as the lockstep loop does."""
+        it = rnd.iteration
+        shard_bytes = self.model_bytes / self.n_ps
+        samples = [m.sample(shard_bytes) for m in self.gather_models]
+        if self.protocol == "ltp":
+            total = max(1, self.train_cfg.steps)
+            self.controller.set_progress(it / total)
+            close, frac = self.controller.step(samples)
+            bst = close + broadcast_time(self.net, self.model_bytes,
+                                         n_ps=self.n_ps)
+        else:
+            close = max(float(s.completion_times.max()) for s in samples)
+            bst = close + broadcast_time(
+                self.net, self.model_bytes, n_ps=self.n_ps
+            ) * self.gather_models[0].loss_inflation()
+            frac = np.ones(self.w)
+        masks = (stp.draw_delivery_masks(self.plan, self.w, self._mask_rng,
+                                         frac)
+                 if self.protocol == "ltp"
+                 else np.ones((self.w, self.plan.n_packets), np.float32))
+        if self.protocol == "ltp" and float(np.mean(frac)) < 1.0 - 1e-9:
+            self.tel.record("early_close", self.sim.now + close,
+                            iteration=it, delivered=float(np.mean(frac)))
+        # the analytic incast model assumes all W flows start together, so
+        # the gather is anchored at the LAST grad-ready (= now, the event
+        # that completed the barrier) — under heterogeneous compute the
+        # straggler's lateness must not absorb the transport cost
+        self._bsp_commit(rnd, masks, frac, bst, t_anchor=self.sim.now)
+
+    def _bsp_des_closed(self, sharded) -> None:
+        """All DES shards closed: real delivery masks -> fused step."""
+        rnd = self._bsp_round
+        per_shard = sharded.delivery_masks()        # (n_ps, W, n)
+        masks = np.stack([
+            stp.tile_mask_onto_plan(
+                self.plan, np.concatenate([per_shard[p][f]
+                                           for p in range(self.n_ps)]))
+            for f in range(self.w)
+        ])
+        frac = sharded.delivered_fracs()
+        close = self.sim.now - rnd.t_first
+        bst = close + broadcast_time(self.net, self.model_bytes,
+                                     n_ps=self.n_ps)
+        self._bsp_commit(rnd, masks, frac, bst)
+
+    def _bsp_commit(self, rnd: _BSPRound, masks: np.ndarray,
+                    frac: np.ndarray, bst: float,
+                    t_anchor: Optional[float] = None) -> None:
+        it = rnd.iteration
+        if self._fused_step is None:
+            self._fused_step = stp.build_fused_step(
+                self.api, self.opt, self.ltp, self.plan, self.w,
+                self.protocol)
+        lr = lr_at(self.train_cfg, it, self._epoch_steps)
+        (self.params, self.opt_state, self.residual, loss, realized) = \
+            self._fused_step(self.params, self.opt_state, self.residual,
+                             self._shaped_batch(it), jnp.asarray(masks),
+                             jnp.asarray(frac, jnp.float32),
+                             jnp.asarray(lr, jnp.float32))
+        # the iteration commits when the broadcast lands: history record,
+        # params visibility, and the barrier release all happen there.
+        # ``t_anchor`` is the gather start (analytic: last grad-ready;
+        # DES: the round's first send, whose ``bst`` already spans the
+        # in-flight gather).
+        t_commit = (rnd.t_first if t_anchor is None else t_anchor) + bst
+
+        def commit(loss=loss, realized=realized):
+            self.version += 1
+            self.max_applied_iter = it
+            self._visible = (self.version, self.params)
+            self.sim_time = self.sim.now
+            rec = {
+                "step": it,
+                "loss": float(loss),
+                "bst": bst,
+                "delivered": float(realized),
+                "sim_time": self.sim_time,
+            }
+            self.tel.record("apply", self.sim.now, step=it, n_grads=self.w,
+                            staleness_max=0, staleness_mean=0.0,
+                            loss=rec["loss"])
+            if self._epoch_steps and (it + 1) % self._epoch_steps == 0:
+                self.controller.new_epoch()
+            if self._eval_fn is not None and self._eval_every and \
+                    (it + 1) % self._eval_every == 0:
+                rec["eval"] = float(self._eval_fn(self.params))
+            self.history.append(rec)
+            if self._log_every and it % self._log_every == 0:
+                msg = f"step {it:5d} loss {rec['loss']:.4f} " \
+                      f"bst {bst*1e3:6.1f}ms delivered {rec['delivered']:.3f}"
+                if "eval" in rec:
+                    msg += f" eval {rec['eval']:.4f}"
+                print(msg, flush=True)
+            self.step_idx = it + 1
+            self._bsp_round = None
+            self.policy.on_applied([])
+            self.wake_blocked()
+            self.maybe_finish()
+
+        self.sim.at(t_commit, commit)
+
+    # ------------------------------------------------------------------
+    # async/ssp apply path
+    # ------------------------------------------------------------------
+    def apply_batch(self, batch: List[PendingGrad]) -> None:
+        if self._apply_fn is None:
+            self._apply_fn = stp.build_apply_fn(
+                self.api, self.opt, self.ltp, self.plan, self.w,
+                premasked=self.ltp.error_feedback)
+            if self.ltp.error_feedback:
+                self._ef_gate = stp.build_ef_gate_fn(self.ltp)
+        n, p = self.plan.n_packets, self.plan.packet_floats
+        pw = self.policy.weights(batch)
+        weights = np.zeros(self.w, np.float32)
+        rows_flat, rows_mask, fracs = [], [], []
+        for i, g in enumerate(batch):
+            flat, mask = g.payload["flat"], g.payload["mask"]
+            if self._ef_gate is not None:
+                flat, new_res = self._ef_gate(flat, self.residual[g.worker],
+                                              mask)
+                self.residual = self.residual.at[g.worker].set(new_res)
+            rows_flat.append(flat)
+            rows_mask.append(mask)
+            weights[i] = 1.0 if pw is None else pw[i]
+            fracs.append(g.payload["frac"])
+        pad = self.w - len(batch)   # fixed (W, n, p) shape: compile once
+        if pad:
+            rows_flat.append(jnp.zeros((pad, n, p), jnp.float32))
+            rows_mask.append(jnp.zeros((pad, n), jnp.float32))
+            stacked = jnp.concatenate(
+                [jnp.stack(rows_flat[:-1]), rows_flat[-1]])
+            masks = jnp.concatenate(
+                [jnp.stack(rows_mask[:-1]), rows_mask[-1]])
+        else:
+            stacked = jnp.stack(rows_flat)
+            masks = jnp.stack(rows_mask)
+        top_it = max(g.iteration for g in batch)
+        lr = lr_at(self.train_cfg, top_it, self._epoch_steps)
+        frac = jnp.asarray(np.mean(fracs), jnp.float32)
+        self.params, self.opt_state = self._apply_fn(
+            self.params, self.opt_state, stacked, masks,
+            jnp.asarray(weights), frac, jnp.asarray(lr, jnp.float32))
+        self.version += 1
+        self.max_applied_iter = max(self.max_applied_iter, top_it)
+        stale = [g.staleness for g in batch]
+        loss = float(np.mean([float(g.payload["loss"]) for g in batch]))
+        self.sim_time = self.sim.now
+        rec = {
+            "step": self.version - 1,
+            "loss": loss,
+            "delivered": float(np.mean(fracs)),
+            "staleness": int(max(stale)),
+            "n_grads": len(batch),
+            "sim_time": self.sim_time,
+        }
+        self.tel.record("apply", self.sim.now, step=self.version - 1,
+                        n_grads=len(batch), staleness_max=int(max(stale)),
+                        staleness_mean=float(np.mean(stale)), loss=loss)
+        if self._eval_fn is not None and self._eval_every and \
+                self.version % self._eval_every == 0:
+            rec["eval"] = float(self._eval_fn(self.params))
+        self.history.append(rec)
+        if self._log_every and (self.version - 1) % self._log_every == 0:
+            print(f"apply {self.version - 1:5d} loss {loss:.4f} "
+                  f"staleness {max(stale)} n_grads {len(batch)}", flush=True)
+        self.policy.on_applied(batch)
+        self._publish(self.version, self.params)
+        self.wake_blocked()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def maybe_finish(self) -> None:
+        if self._stopped or self._n_finished < self.w:
+            return
+        if self._inflight or self._bsp_round is not None:
+            return
+        if self.policy.pending_count():
+            return
+        self._stopped = True
+        if self.net_des is not None:
+            self.net_des.stop()
+        if self._sampler_cancel is not None:
+            self._sampler_cancel()
+
+    _sampler_cancel = None
+
+    def run(self, batches, *, epoch_steps: int = 0, eval_fn=None,
+            eval_every: int = 0, log_every: int = 0,
+            max_events: int = 200_000_000) -> List[Dict]:
+        self._batches = list(batches)
+        self.steps = len(self._batches)
+        self._epoch_steps = epoch_steps
+        self._eval_fn = eval_fn
+        self._eval_every = eval_every
+        self._log_every = log_every
+        self.workers = [WorkerActor(self, i) for i in range(self.w)]
+        if self.net_des is not None and self.tel.enabled:
+            # trunk-queue sampler: an actor hook on the shared clock
+            interval = max(self.net.rtprop_ms * 1e-3, 1e-3)
+            self._sampler_cancel = self.sim.every(
+                interval,
+                lambda: self.tel.record(
+                    "queue", self.sim.now,
+                    depth=self.policy.pending_count(),
+                    net_depth=self.net_des.queue_depth_pkts()))
+        for wk in self.workers:
+            wk.start()
+        self.sim.run(max_events=max_events)
+        if self.sim.truncated:
+            raise RuntimeError(
+                f"co-simulation truncated at max_events={max_events} "
+                f"(t={self.sim.now:.3f}s, {self._n_finished}/{self.w} "
+                f"workers finished) — raise max_events or shrink the "
+                f"scenario; a truncated run must not pass as converged")
+        if self.net_des is not None:
+            self.net_des.stop()
+        if self._sampler_cancel is not None:
+            self._sampler_cancel()
+        return self.history
+
+    # throughput in items/sec of simulated wall-clock
+    def throughput(self, items_per_step: int) -> float:
+        if not self.history:
+            return 0.0
+        n_iters = (len(self.history) if isinstance(self.policy, BSPPolicy)
+                   else self.steps)
+        return items_per_step * n_iters / max(self.sim_time, 1e-12)

@@ -1,0 +1,83 @@
+"""Structured runtime telemetry (DESIGN.md §8).
+
+Every actor/policy event in a ``ClusterRuntime`` run lands here as one
+flat dict — an append-only stream the benchmarks and tests consume
+directly, and ``summary()`` reduces into the scalar fields the sweep
+rows carry.
+
+Event schema — common fields ``kind`` (str) and ``t`` (sim seconds),
+plus per-kind payload:
+
+  compute_start   worker, iteration, dt
+  grad_ready      worker, iteration            (compute leg done)
+  grad_arrived    worker, iteration, staleness, delivered
+  apply           step, n_grads, staleness_max, staleness_mean, loss
+  early_close     worker|shard, iteration, delivered   (EC fire time = t)
+  stale_drop      worker, iteration, staleness (SSP rejected the grad)
+  block/unblock   worker, iteration            (SSP/BSP gating)
+  queue           depth [, net_depth]          (PS pending / trunk pkts)
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class Telemetry:
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.events: List[dict] = []
+
+    def record(self, kind: str, t: float, **fields) -> None:
+        if self.enabled:
+            self.events.append({"kind": kind, "t": float(t), **fields})
+
+    def of(self, kind: str) -> List[dict]:
+        return [e for e in self.events if e["kind"] == kind]
+
+    def blocked_seconds(self) -> float:
+        """Total worker-seconds spent blocked on the staleness/barrier
+        gate (paired block/unblock events; an unmatched block counts to
+        the last event's timestamp)."""
+        t_end = self.events[-1]["t"] if self.events else 0.0
+        open_t: Dict[int, float] = {}
+        total = 0.0
+        for e in self.events:
+            if e["kind"] == "block":
+                open_t.setdefault(e["worker"], e["t"])
+            elif e["kind"] == "unblock":
+                t0 = open_t.pop(e["worker"], None)
+                if t0 is not None:
+                    total += e["t"] - t0
+        total += sum(t_end - t0 for t0 in open_t.values())
+        return total
+
+    def summary(self) -> Dict[str, float]:
+        """Scalar reduction of the stream — what a sweep row carries."""
+        applies = self.of("apply")
+        stale = [e["staleness_max"] for e in applies]
+        stale_mean = [e["staleness_mean"] for e in applies]
+        queues = self.of("queue")
+        closes = self.of("early_close")
+        out = {
+            "n_events": len(self.events),
+            "n_applies": len(applies),
+            "n_early_close": len(closes),
+            "n_stale_drops": len(self.of("stale_drop")),
+            "blocked_s": round(self.blocked_seconds(), 6),
+            "staleness_max": int(max(stale)) if stale else 0,
+            "staleness_mean": round(float(np.mean(stale_mean)), 4)
+            if stale_mean else 0.0,
+        }
+        if queues:
+            depths = [e["depth"] for e in queues]
+            out["queue_depth_mean"] = round(float(np.mean(depths)), 3)
+            out["queue_depth_max"] = float(np.max(depths))
+            net = [e["net_depth"] for e in queues if "net_depth" in e]
+            if net:
+                out["net_queue_max_pkts"] = round(float(np.max(net)), 2)
+        if closes:
+            out["early_close_mean_delivered"] = round(
+                float(np.mean([e["delivered"] for e in closes])), 4)
+        return out

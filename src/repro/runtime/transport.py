@@ -1,0 +1,308 @@
+"""Transport legs for the cluster runtime (DESIGN.md §8).
+
+Two backends carry a worker's gradient from grad-ready to the PS on the
+runtime's shared ``Sim`` clock:
+
+``AnalyticPerWorkerNet``
+    Fast closed-form per-flow timing for the async/SSP paths: each
+    worker's gather leg is an independent transfer whose serialization
+    shares the trunk with the flows active *at its start* (a bounded
+    approximation of true interleaving), inflated by the protocol's
+    loss model and an incast tail draw — the same ingredients as
+    ``AnalyticIncastModel``, applied per flow instead of per barrier.
+    LTP flows run the per-flow Early Close rule (LT threshold, pct
+    target, deadline); reliable protocols wait for their last byte.
+
+``DESTransport``
+    The packet-level co-simulation: real LTP/TCP senders and receivers
+    over a shared ``Topology`` (one trunk per PS shard, optional
+    heterogeneous access links and cross traffic via ``GatherSpec``),
+    with flows starting the instant the worker's compute finishes. Per
+    iteration, bsp runs one ``ShardedGatherReceiver`` barrier gather;
+    async/SSP run one single-flow ``PSGatherReceiver`` per (worker,
+    shard) so every flow closes independently.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig
+from repro.core.early_close import AnalyticIncastModel
+from repro.net import senders as snd
+from repro.net.ltp_receiver import PSGatherReceiver, ShardedGatherReceiver
+from repro.net.scenarios import (
+    GatherSpec,
+    _build_topology,
+    _fwd_path,
+    _npkts,
+)
+from repro.net.simcore import Packet, Pipe, Sim
+
+
+class AnalyticPerWorkerNet:
+    """Closed-form per-flow transport (the async/SSP fast path).
+
+    ``send(worker, cb)`` schedules ``cb(frac, early_closed)`` at the
+    flow's close time. The model: first byte lands after rtprop/2 + eps;
+    100% would land after ``bytes * active / (bw/8) * loss_inflation *
+    (1 + tail)``; LTP closes per the paper's double-threshold rule
+    evaluated against that linear arrival ramp.
+    """
+
+    def __init__(self, sim: Sim, net: NetConfig, ltp: LTPConfig,
+                 protocol: str, n_workers: int, model_bytes: float,
+                 seed: int = 0, tail_prob: float = 0.15,
+                 tail_scale: float = 1.5):
+        self.sim = sim
+        self.net = net
+        self.ltp = ltp
+        self.protocol = protocol
+        self.w = n_workers
+        self.bytes = float(model_bytes)
+        self.rng = np.random.default_rng(seed + 77)
+        self.tail_prob = tail_prob
+        self.tail_scale = tail_scale
+        # reuse the calibrated per-protocol loss-inflation law
+        self._infl = AnalyticIncastModel(
+            net, n_workers, protocol=protocol, seed=seed).loss_inflation()
+        self.active = 0
+        rt = net.rtprop_ms * 1e-3
+        share = net.bandwidth_gbps * 1e9 / 8.0 / n_workers
+        self.lt = ltp.lt_init_rtprop_mult * rt + self.bytes / share
+        self.deadline = self.lt + ltp.deadline_c_ms * 1e-3
+
+    def send(self, worker: int,
+             cb: Callable[[float, bool], None]) -> None:
+        rt = self.net.rtprop_ms * 1e-3
+        bw = self.net.bandwidth_gbps * 1e9 / 8.0
+        self.active += 1
+        tail = (self.rng.exponential(self.tail_scale)
+                if self.rng.random() < self.tail_prob else 0.0)
+        t0 = rt
+        t_full = rt + self.bytes * self.active / bw * self._infl * (1.0 + tail)
+        if self.protocol != "ltp" or t_full <= self.lt:
+            t_close, frac, early = t_full, 1.0, False
+        else:
+            # earliest t >= LT with pct >= threshold; deadline wins
+            t_thr = t0 + self.ltp.data_pct_threshold * (t_full - t0)
+            t_close = min(max(self.lt, t_thr), self.deadline)
+            frac = float(np.clip((t_close - t0) / max(t_full - t0, 1e-12),
+                                 0.0, 1.0))
+            if t_close >= t_full:
+                t_close, frac, early = t_full, 1.0, False
+            else:
+                early = True
+
+        def done():
+            self.active -= 1
+            cb(frac, early)
+
+        self.sim.after(t_close, done)
+
+
+class _DESFlowSet:
+    """Per-(worker, iteration) flow bundle on the shared topology: one
+    single-flow gather receiver per PS shard; fires ``cb`` once all
+    shards have closed."""
+
+    def __init__(self, tr: "DESTransport", worker: int,
+                 cb: Callable[[np.ndarray, float, bool], None]):
+        self.tr = tr
+        self.worker = worker
+        self.cb = cb
+        self.masks: List[Optional[np.ndarray]] = [None] * tr.n_ps
+        self.closed = 0
+        self.early = False
+        for p in range(tr.n_ps):
+            self._one_flow(p)
+
+    def _one_flow(self, p: int) -> None:
+        tr, w = self.tr, self.worker
+        back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate, 10_000,
+                    tr.rng)
+        if tr.protocol == "ltp":
+            sender_cell: list = [None]
+
+            def send_stop(flow):
+                s = sender_cell[0]
+                if s is not None:
+                    back.send(Packet(s.flow, -2, 41, kind="stop"), s.on_ack)
+
+            def on_close(recv, p=p):
+                full = recv.all_full
+                self._shard_done(p, recv.delivery_masks()[0], not full)
+
+            recv = PSGatherReceiver(
+                tr.sim, [w], tr.lt_per_worker[w], tr.deadline_per_worker[w],
+                tr.ltp.data_pct_threshold, send_stop, on_close=on_close)
+            s = snd.LTPSender(tr.sim, _fwd_path(tr.topo, tr.spec, p, w),
+                              recv.on_data, tr.n, critical=tr.crit, flow=w,
+                              rng=tr.rng, train_len=tr.coalesce)
+            sender_cell[0] = s
+            recv.attach_ack(w, lambda pkt, s=s, back=back:
+                            back.send(pkt, s.on_ack))
+            if tr.coalesce > 1:
+                s.deliver_train = recv.on_data_train
+                recv.attach_ack_train(
+                    w, lambda acks, s=s, back=back:
+                    back.send_train(acks, s.on_ack_train))
+            s.start()
+        else:
+            def on_done(s, p=p):
+                self._shard_done(p, np.ones(tr.n, bool), False)
+
+            s = snd.make_sender(tr.protocol, tr.sim,
+                                _fwd_path(tr.topo, tr.spec, p, w), None,
+                                tr.n, flow=w, rng=tr.rng, on_done=on_done,
+                                train_len=tr.coalesce)
+            r = snd.TcpReceiver(tr.sim, lambda pkt, s=s, back=back:
+                                back.send(pkt, s.on_ack), w)
+            s.deliver = r.on_data
+            if tr.coalesce > 1:
+                s.deliver_train = r.on_data_train
+                r.send_ack_train = (lambda acks, s=s, back=back:
+                                    back.send_train(acks, s.on_ack_train))
+            r.n_total = tr.n
+            s.start()
+
+    def _shard_done(self, p: int, mask: np.ndarray, early: bool) -> None:
+        if self.masks[p] is not None:
+            return
+        self.masks[p] = mask
+        self.early = self.early or early
+        self.closed += 1
+        if self.closed >= self.tr.n_ps:
+            stacked = np.stack(self.masks)          # (n_ps, n)
+            frac = float(stacked.mean())
+            self.cb(stacked, frac, self.early)
+
+
+class _DESBarrierGather:
+    """Per-iteration bsp gather on the shared topology: one
+    ``ShardedGatherReceiver`` over all W workers; senders join as their
+    compute finishes (the runtime's start_delays, made event-driven)."""
+
+    def __init__(self, tr: "DESTransport",
+                 cb: Callable[[ShardedGatherReceiver], None]):
+        self.tr = tr
+        self.cb = cb
+        self.t0 = tr.sim.now
+        self._senders: Dict = {}
+        self._stops: Dict = {}
+
+        def send_stop(p, f):
+            stop = self._stops.get((p, f))
+            if stop is not None:
+                stop()
+
+        self.sharded = ShardedGatherReceiver(
+            tr.sim, tr.n_ps, list(range(tr.w)),
+            [tr.lt_shard] * tr.n_ps, [tr.deadline_shard] * tr.n_ps,
+            tr.ltp.data_pct_threshold, send_stop)
+        self._n_closed = 0
+        for s in self.sharded.shards:
+            s.on_close = self._shard_closed
+
+    def _shard_closed(self, shard: PSGatherReceiver) -> None:
+        self.tr.on_early_close(shard.ps_id, self.tr.sim.now,
+                               float(shard.agg_pct), shard.all_full)
+        self._n_closed += 1
+        if self._n_closed >= self.tr.n_ps:
+            self.cb(self.sharded)
+
+    def add_worker(self, worker: int) -> None:
+        """Start worker's shard flows now (its compute just finished)."""
+        tr = self.tr
+        for p in range(tr.n_ps):
+            shard = self.sharded.shard(p)
+            if shard.closed:
+                continue   # shard already gave up on this straggler
+            back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate,
+                        10_000, tr.rng)
+            s = snd.LTPSender(tr.sim, _fwd_path(tr.topo, tr.spec, p, worker),
+                              shard.on_data, tr.n, critical=tr.crit,
+                              flow=worker, rng=tr.rng, train_len=tr.coalesce)
+            shard.attach_ack(worker, lambda pkt, s=s, back=back:
+                             back.send(pkt, s.on_ack))
+            if tr.coalesce > 1:
+                s.deliver_train = shard.on_data_train
+                shard.attach_ack_train(
+                    worker, lambda acks, s=s, back=back:
+                    back.send_train(acks, s.on_ack_train))
+            self._stops[(p, worker)] = (
+                lambda s=s, back=back: back.send(
+                    Packet(s.flow, -2, 41, kind="stop"), s.on_ack))
+            self._senders[(p, worker)] = s
+            s.start()
+
+
+class DESTransport:
+    """Packet-level transport on the runtime's shared clock. bsp uses
+    ``start_gather``/``add_worker`` (one barrier gather per iteration);
+    async/SSP use ``send`` (independent per-worker flow sets). LTP flows
+    in this transport carry static LT thresholds from the paper's init
+    formula (per-link attainable share); the epoch-adaptive LT update of
+    ``scenarios._iterate_gather`` is out of scope here."""
+
+    def __init__(self, sim: Sim, net: NetConfig, ltp: LTPConfig,
+                 protocol: str, n_workers: int, model_bytes: float,
+                 n_ps: int = 1, spec: Optional[GatherSpec] = None,
+                 seed: int = 0, coalesce: int = 1,
+                 on_early_close: Optional[Callable] = None):
+        self.sim = sim
+        self.net = net
+        self.ltp = ltp
+        self.protocol = protocol
+        self.w = n_workers
+        self.spec = spec or GatherSpec(n_ps=n_ps)
+        self.n_ps = self.spec.n_ps
+        self.coalesce = max(1, int(coalesce))
+        self.rng = np.random.default_rng(seed + 101)
+        self.bw = net.bandwidth_gbps * 1e9
+        self.half_rtt = net.rtprop_ms * 1e-3
+        self.topo, self.sources = _build_topology(
+            sim, net, n_workers, self.spec, self.rng, self.coalesce)
+        shard_bytes = model_bytes / self.n_ps
+        self.n = _npkts(shard_bytes, protocol)
+        crit = np.zeros(self.n, bool)
+        ncrit = max(2, int(0.01 * self.n))
+        crit[: ncrit // 2] = True
+        crit[-(ncrit - ncrit // 2):] = True
+        self.crit = crit
+        rt = net.rtprop_ms * 1e-3
+        c = ltp.deadline_c_ms * 1e-3
+        self.lt_per_worker = np.empty(n_workers)
+        for f in range(n_workers):
+            share = self.spec.worker_share_bps(f, n_workers, net) / 8.0
+            self.lt_per_worker[f] = (ltp.lt_init_rtprop_mult * rt
+                                     + shard_bytes / share)
+        self.deadline_per_worker = self.lt_per_worker + c
+        self.lt_shard = float(self.lt_per_worker.max())
+        self.deadline_shard = self.lt_shard + c
+        self._on_early_close = on_early_close
+
+    def stop(self) -> None:
+        for src in self.sources:
+            src.stop()
+
+    def on_early_close(self, shard: int, t: float, delivered: float,
+                       full: bool) -> None:
+        if self._on_early_close is not None and not full:
+            self._on_early_close(shard, t, delivered)
+
+    # -- async/SSP: independent per-worker flow sets ------------------------
+    def send(self, worker: int,
+             cb: Callable[[np.ndarray, float, bool], None]) -> None:
+        _DESFlowSet(self, worker, cb)
+
+    # -- bsp: one barrier gather per iteration ------------------------------
+    def start_gather(self, cb: Callable[[ShardedGatherReceiver], None],
+                     ) -> _DESBarrierGather:
+        return _DESBarrierGather(self, cb)
+
+    def queue_depth_pkts(self) -> float:
+        """Max trunk queue depth right now (telemetry sampler hook)."""
+        depths = self.topo.queue_depths()
+        return max(depths.values()) if depths else 0.0

@@ -1,5 +1,6 @@
-"""PSTrainer — the paper's 8-worker/1-PS training loop, exactly, on one
-host device.
+"""PSTrainer — the paper's W-worker/1-PS training loop on one host
+device, now a thin façade over the event-driven cluster runtime
+(DESIGN.md §8).
 
 Per-worker gradients come from a ``vmap`` over the worker axis (identical
 semantics to W data-parallel machines holding replicated weights). The
@@ -12,11 +13,23 @@ transport layer is pluggable:
   * protocol tcp-family: lossless sync (delivered=1); BST from the transport
                          model (or DES samples) — only wall-clock differs.
 
+Engines:
+
+  * ``engine="runtime"`` (default): delegates to
+    ``repro.runtime.ClusterRuntime`` — the event-driven co-simulation.
+    With the default bsp policy and deterministic compute this
+    reproduces the legacy lockstep loop record-for-record (same fused
+    step, same controller and mask RNG streams; pinned by
+    tests/test_runtime.py), while opening the async/ssp aggregation
+    policies, heterogeneous compute models, and the packet-level DES
+    transport to the same API.
+  * ``engine="lockstep"``: the original synchronous loop below. Also
+    selected automatically when a precomputed trace (``bst_trace`` /
+    ``delivered_trace`` / ``mask_trace``) is supplied, since traces are
+    a lockstep-only feature.
+
 Wall-clock per iteration = compute_time + BST, which is how throughput
 (Fig 12), TTA (Fig 13) and BST (Fig 14) are all derived from one loop.
-Transport timing backend: AnalyticIncastModel (fast) or precomputed DES
-samples (pass ``bst_trace`` — e.g. from any registered net scenario via
-``repro.net.scenarios.train_iterations``).
 
 Delivery masks are drawn host-side each step — Bernoulli(frac) with
 critical packets pinned, or, when ``mask_trace`` is given, the actual
@@ -44,7 +57,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import LTPConfig, NetConfig, TrainConfig
-from repro.core import ltp_sync as ls
 from repro.core import packets as pk
 from repro.core.early_close import (
     AnalyticIncastModel,
@@ -53,6 +65,8 @@ from repro.core.early_close import (
 )
 from repro.models.api import ModelApi
 from repro.optim import Optimizer, lr_at
+from repro.runtime import ClusterRuntime
+from repro.runtime import step as stp
 
 
 def params_bytes(params) -> int:
@@ -75,7 +89,18 @@ class PSTrainer:
         mask_trace: Optional[np.ndarray] = None,
         seed: int = 0,
         n_ps: int = 1,
+        engine: str = "runtime",
+        policy="bsp",
+        policy_kw: Optional[dict] = None,
+        compute_model=None,
+        transport: str = "analytic",
     ):
+        if engine not in ("runtime", "lockstep"):
+            raise ValueError(f"unknown engine {engine!r}")
+        has_trace = (bst_trace is not None or delivered_trace is not None
+                     or mask_trace is not None)
+        if has_trace:
+            engine = "lockstep"   # traces are a lockstep-only feature
         self.api = api
         self.opt = opt
         self.train_cfg = train
@@ -88,6 +113,28 @@ class PSTrainer:
         self.delivered_trace = delivered_trace
         self.mask_trace = (np.asarray(mask_trace, bool)
                            if mask_trace is not None else None)
+        self.engine = engine
+        self._rt: Optional[ClusterRuntime] = None
+        if engine == "runtime":
+            self._rt = ClusterRuntime(
+                api, opt, train, ltp, net, n_workers=n_workers,
+                protocol=protocol, policy=policy, policy_kw=policy_kw,
+                compute_model=compute_model, compute_time=compute_time,
+                n_ps=n_ps, seed=seed, transport=transport)
+            # mirror the runtime's state so the public surface is stable
+            self.params = self._rt.params
+            self.opt_state = self._rt.opt_state
+            self.plan = self._rt.plan
+            self.residual = self._rt.residual
+            self.model_bytes = self._rt.model_bytes
+            self.controller = self._rt.controller
+            self.gather_models = self._rt.gather_models
+            self.telemetry = self._rt.tel
+            self.n_ps = n_ps
+            self.sim_time = 0.0
+            self.step_idx = 0
+            self.history: List[Dict] = self._rt.history
+            return
         self._mask_rng = np.random.default_rng(seed + 23)
         key = jax.random.PRNGKey(seed)
         self.params = api.init(key)
@@ -101,6 +148,7 @@ class PSTrainer:
         )
         self.model_bytes = self.plan.n_floats * 4
         self.n_ps = n_ps
+        self.telemetry = None
         self.controller = MultiPSEarlyClose(ltp, net, n_workers,
                                             self.model_bytes, n_ps=n_ps)
         # one analytic incast per PS shard (independent tail draws)
@@ -112,73 +160,15 @@ class PSTrainer:
         self.sim_time = 0.0
         self.step_idx = 0
         self.history: List[Dict] = []
-        self._step_fn = self._build_step()
-
-    # ------------------------------------------------------------------
-    def _build_step(self):
-        api, opt, ltp, plan, w = self.api, self.opt, self.ltp, self.plan, self.w
-        use_ltp = self.protocol == "ltp"
-
-        def per_worker_grads(params, batch):
-            def one(b):
-                return jax.value_and_grad(lambda p: api.loss_fn(p, b))(params)
-            return jax.vmap(one)(batch)   # (W,) losses, (W, ...) grads
-
-        def step(params, opt_state, residual, batch, masks, frac, lr):
-            losses, grads_w = per_worker_grads(params, batch)
-            flat_w = jax.vmap(lambda g: pk.flatten(plan, g))(grads_w)
-            if use_ltp:
-                # the PS hot loop: ONE fused masked multi-worker reduction
-                # (kernels.packet_reduce under sync_backend="pallas")
-                if residual is not None:
-                    # error feedback materializes the gated stream anyway —
-                    # gate once (dropfill under pallas), reduce the result
-                    flat_w = flat_w + residual
-                    sent = ls.apply_delivery(
-                        flat_w.reshape(w * plan.n_packets, plan.packet_floats),
-                        masks.reshape(-1), backend=ltp.sync_backend,
-                        interpret=ltp.kernel_interpret,
-                    ).reshape(flat_w.shape)
-                    new_residual = flat_w - sent
-                    mean_flat = ls.reduce_packet_stream(
-                        sent, masks, ltp, w, expected_frac=frac,
-                        premasked=True)
-                else:
-                    new_residual = None
-                    mean_flat = ls.reduce_packet_stream(
-                        flat_w, masks, ltp, w, expected_frac=frac)
-                realized = jnp.mean(masks)
-            else:
-                mean_flat = jnp.mean(flat_w, axis=0)
-                new_residual = residual
-                realized = jnp.ones(())
-            dtypes = [x.dtype for x in jax.tree_util.tree_leaves(params)]
-            mean_grads = pk.unflatten(plan, mean_flat, dtypes)
-            updates, opt_state = opt.update(mean_grads, opt_state, params, lr)
-            params = jax.tree.map(lambda p, u: p + u, params, updates)
-            return params, opt_state, new_residual, jnp.mean(losses), realized
-
-        return jax.jit(step)
+        self._step_fn = stp.build_fused_step(api, opt, ltp, self.plan,
+                                             n_workers, protocol)
 
     # ------------------------------------------------------------------
     def _delivery_masks(self, it: int, frac: np.ndarray) -> np.ndarray:
-        """(W, n_packets) float32 per-(worker, packet) delivery mask.
-
-        From the DES ``mask_trace`` when given (the trace's packet stream
-        is tiled/cropped onto the plan's packets), else Bernoulli(frac)
-        per packet. Critical packets are always pinned to 1 — the CQ
-        retransmit guarantee (paper §III-E).
-        """
-        n = self.plan.n_packets
-        if self.mask_trace is not None:
-            m = self.mask_trace[it % len(self.mask_trace)]
-            reps = -(-n // m.shape[1])
-            m = np.tile(m, (1, reps))[:, :n].astype(np.float32)
-        else:
-            m = (self._mask_rng.random((self.w, n))
-                 < np.asarray(frac)[:, None]).astype(np.float32)
-        m[:, self.plan.critical] = 1.0
-        return m
+        """(W, n_packets) float32 per-(worker, packet) delivery mask."""
+        return stp.draw_delivery_masks(self.plan, self.w, self._mask_rng,
+                                       frac, mask_trace=self.mask_trace,
+                                       it=it)
 
     # ------------------------------------------------------------------
     def _transport(self, it: int):
@@ -208,6 +198,17 @@ class PSTrainer:
 
     def run(self, batches, *, epoch_steps: int = 0, eval_fn=None,
             eval_every: int = 0, log_every: int = 0) -> List[Dict]:
+        if self._rt is not None:
+            out = self._rt.run(batches, epoch_steps=epoch_steps,
+                               eval_fn=eval_fn, eval_every=eval_every,
+                               log_every=log_every)
+            self.params = self._rt.params
+            self.opt_state = self._rt.opt_state
+            self.residual = self._rt.residual
+            self.sim_time = self._rt.sim_time
+            self.step_idx = self._rt.step_idx
+            self.history = self._rt.history
+            return out
         for batch in batches:
             batch = jax.tree.map(
                 lambda x: jnp.asarray(x).reshape(
@@ -250,6 +251,8 @@ class PSTrainer:
 
     # throughput in items/sec of simulated wall-clock
     def throughput(self, items_per_step: int) -> float:
+        if self._rt is not None:
+            return self._rt.throughput(items_per_step)
         if not self.history:
             return 0.0
         return items_per_step * len(self.history) / self.sim_time

@@ -1,0 +1,116 @@
+"""CrossTrafficSource lifecycle: start/stop idempotence, restart safety,
+and offered_bps accounting under per-packet and chunked-train injection."""
+import numpy as np
+import pytest
+
+from repro.net.simcore import CrossTrafficSource, Pipe, Sim
+
+
+def _setup(train_len=1, load=0.5, rate=1e9, queue=10_000, seed=4):
+    sim = Sim()
+    pipe = Pipe(sim, rate, 0.1e-3, 0.0, queue, np.random.default_rng(seed))
+    src = CrossTrafficSource(sim, pipe, load,
+                             rng=np.random.default_rng(seed + 1),
+                             on_mean=2e-3, off_mean=2e-3,
+                             train_len=train_len)
+    return sim, pipe, src
+
+
+@pytest.mark.parametrize("train_len", [1, 8])
+def test_start_is_idempotent(train_len):
+    """A second start() on a running source must not double the burst
+    chain: injections match a single-start twin exactly."""
+    sim1, _, one = _setup(train_len)
+    one.start()
+    sim1.run(until=0.05)
+    sim2, _, two = _setup(train_len)
+    two.start()
+    two.start()
+    two.start()
+    sim2.run(until=0.05)
+    assert two.n_injected == one.n_injected > 0
+
+
+@pytest.mark.parametrize("train_len", [1, 8])
+def test_stop_is_idempotent_and_freezes_injection(train_len):
+    sim, _, src = _setup(train_len)
+    src.start()
+    sim.run(until=0.02)
+    src.stop()
+    src.stop()
+    frozen = src.n_injected
+    assert frozen > 0
+    sim.run()          # drain: pending bursts/injections must be no-ops
+    assert src.n_injected == frozen
+    assert src.n_delivered == frozen   # lossless pipe: all in-flight land
+
+
+def test_stop_before_start_is_safe():
+    sim, _, src = _setup()
+    src.stop()
+    sim.run()
+    assert src.n_injected == 0
+    src.start()        # still usable after a premature stop
+    sim.run(until=0.01)
+    assert src.n_injected > 0
+
+
+def test_restart_after_stop_resumes_single_chain():
+    sim, _, src = _setup(train_len=4)
+    src.start()
+    sim.run(until=0.02)
+    src.stop()
+    sim.run(until=0.04)
+    mid = src.n_injected
+    src.start()
+    horizon = 1.0
+    sim.run(until=0.04 + horizon)
+    resumed_bps = (src.n_injected - mid) * src.pkt_bytes * 8.0 / horizon
+    # one chain, not two: the resumed long-run rate tracks offered_bps
+    # (a doubled burst chain would land near 2x)
+    assert resumed_bps == pytest.approx(src.offered_bps, rel=0.4)
+
+
+def test_stale_generation_injections_are_orphaned():
+    """stop()+start() while a prior life's injection events are still in
+    the heap must not double the offered load: old-generation events are
+    no-ops."""
+    sim, _, src = _setup()
+    src.start()
+    old_gen = src._gen
+    src.stop()
+    src.start()
+    assert src._gen == old_gen + 1
+    n = src.n_injected
+    src._inject(old_gen)                     # orphaned per-packet event
+    src._inject_train(4, 1e-6, old_gen)      # orphaned chunked train
+    assert src.n_injected == n
+    src._inject(src._gen)                    # current life still injects
+    assert src.n_injected == n + 1
+
+
+@pytest.mark.parametrize("train_len", [1, 8])
+def test_offered_bps_accounting(train_len):
+    """Long-run injected rate tracks offered_bps = load * duty * rate for
+    both the per-packet and the chunked-train engines, and every injected
+    packet is accounted for (delivered or dropped at the pipe)."""
+    sim, pipe, src = _setup(train_len, load=0.4)
+    assert src.offered_bps == pytest.approx(0.4 * 0.5 * pipe.rate)
+    horizon = 2.0
+    src.start()
+    sim.run(until=horizon)
+    src.stop()
+    sim.run()          # drain in-flight
+    injected_bps = src.n_injected * src.pkt_bytes * 8.0 / horizon
+    assert injected_bps == pytest.approx(src.offered_bps, rel=0.25)
+    assert src.n_injected == (src.n_delivered + pipe.n_dropped_queue
+                              + pipe.n_dropped_loss)
+
+
+def test_offered_bps_with_explicit_duty():
+    sim = Sim()
+    pipe = Pipe(sim, 1e9, 1e-4, 0.0, 100, np.random.default_rng(0))
+    src = CrossTrafficSource(sim, pipe, 0.8, on_mean=5e-3, duty=0.25)
+    assert src.duty == pytest.approx(0.25)
+    assert src.off_mean == pytest.approx(5e-3 * 3)
+    assert src.offered_bps == pytest.approx(0.8 * 0.25 * 1e9)

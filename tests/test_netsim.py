@@ -23,6 +23,34 @@ def test_pipe_serialization_and_delay():
     np.testing.assert_allclose(times, [0.011, 0.012, 0.013], rtol=1e-6)
 
 
+def test_sim_truncation_warns_and_flags():
+    """Hitting max_events with work pending must be loud: RuntimeWarning
+    + sim.truncated, so a cut-off co-simulation can't pass as converged."""
+    sim = Sim()
+
+    def chain():
+        sim.after(1e-3, chain)
+
+    chain()
+    with pytest.warns(RuntimeWarning, match="max_events"):
+        sim.run(max_events=5)
+    assert sim.truncated and sim._heap
+    # a clean run leaves the flag untouched
+    sim2 = Sim()
+    sim2.after(0.1, lambda: None)
+    sim2.run(max_events=5)
+    assert not sim2.truncated
+
+
+def test_sim_every_hook():
+    sim = Sim()
+    ticks = []
+    cancel = sim.every(0.01, lambda: ticks.append(sim.now))
+    sim.after(0.055, cancel)
+    sim.run()
+    np.testing.assert_allclose(ticks, [0.01, 0.02, 0.03, 0.04, 0.05])
+
+
 def test_pipe_loss_and_conservation():
     sim = Sim()
     rng = np.random.default_rng(1)

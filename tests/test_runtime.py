@@ -1,0 +1,337 @@
+"""Cluster runtime (DESIGN.md §8): bsp/legacy equivalence, async & SSP
+aggregation under stragglers, compute models, staleness-weighted
+reduction, DES co-simulation, and truncation safety."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import ltp_sync as ls
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.optim import make_optimizer
+from repro.runtime import (
+    ClusterRuntime,
+    DeterministicCompute,
+    LognormalStragglerCompute,
+    TraceCompute,
+    make_compute_model,
+    make_policy,
+)
+from repro.runtime.policies import AsyncPolicy, BSPPolicy, PendingGrad, SSPPolicy
+from repro.train import PSTrainer
+
+W = 4
+STEPS = 5
+NET = NetConfig(10, 1, 0.001, 4096)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    tc = TrainConfig(batch=32, lr=0.05, steps=STEPS)
+    return api, tc
+
+
+def _data():
+    return batches(SyntheticCIFAR(seed=0), 32, STEPS)
+
+
+def _trainer(api, tc, engine, protocol="ltp", **kw):
+    return PSTrainer(api, make_optimizer(tc), tc, LTPConfig(), NET,
+                     n_workers=W, protocol=protocol, compute_time=0.05,
+                     seed=0, engine=engine, **kw)
+
+
+def _runtime(api, tc, policy, protocol="ltp", transport="analytic",
+             ltp=None, **kw):
+    return ClusterRuntime(api, make_optimizer(tc), tc, ltp or LTPConfig(),
+                          NET, n_workers=W, protocol=protocol,
+                          policy=policy, compute_time=0.05, seed=0,
+                          transport=transport, **kw)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bsp under the runtime == legacy lockstep PSTrainer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["ltp", "cubic"])
+def test_bsp_matches_legacy_lockstep(setup, protocol):
+    """Same seed, same masks -> per-iteration records and final params
+    match the legacy loop to float tolerance (they are bitwise-identical
+    in practice: same fused step, same RNG streams)."""
+    api, tc = setup
+    legacy = _trainer(api, tc, "lockstep", protocol)
+    h1 = legacy.run(_data(), epoch_steps=3)
+    rt = _trainer(api, tc, "runtime", protocol)
+    assert rt.engine == "runtime" and rt._rt is not None
+    h2 = rt.run(_data(), epoch_steps=3)
+    assert len(h1) == len(h2) == STEPS
+    for a, b in zip(h1, h2):
+        assert a["step"] == b["step"]
+        for k in ("loss", "bst", "delivered", "sim_time"):
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6, atol=1e-9)
+    for x, y in zip(jax.tree_util.tree_leaves(legacy.params),
+                    jax.tree_util.tree_leaves(rt.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-8)
+
+
+def test_trace_inputs_fall_back_to_lockstep(setup):
+    api, tc = setup
+    tr = _trainer(api, tc, "runtime", bst_trace=np.array([0.01, 0.02]))
+    assert tr.engine == "lockstep" and tr._rt is None
+    h = tr.run(_data())
+    assert [r["bst"] for r in h[:2]] == [0.01, 0.02]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: async / ssp reduce sim time vs bsp under lognormal stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_async_and_ssp_beat_bsp_under_stragglers(setup):
+    api, tc = setup
+    compute = LognormalStragglerCompute(W, base=0.05, sigma=0.3,
+                                        straggler_prob=0.25,
+                                        straggler_mult=5.0, seed=7)
+    times = {}
+    for policy in ("bsp", "async", "ssp"):
+        kw = {"policy_kw": {"staleness": 2}} if policy == "ssp" else {}
+        rt = _runtime(api, tc, policy, compute_model=compute, **kw)
+        rt.run(_data(), epoch_steps=3)
+        times[policy] = rt.sim_time
+        assert all(np.isfinite(r["loss"]) for r in rt.history)
+        if policy == "bsp":
+            assert len(rt.history) == STEPS
+            assert rt.tel.summary()["blocked_s"] > 0   # barrier waits
+        else:
+            # apply-on-arrival: one record per admitted batch, covering
+            # every non-dropped worker-iteration gradient
+            applied = sum(r["n_grads"] for r in rt.history)
+            assert applied == W * STEPS - rt.tel.summary()["n_stale_drops"]
+    assert times["async"] < times["bsp"]
+    assert times["ssp"] < times["bsp"]
+
+
+def test_ssp_staleness_bound_and_drops(setup):
+    api, tc = setup
+    compute = LognormalStragglerCompute(W, base=0.05, sigma=0.4,
+                                        straggler_prob=0.4,
+                                        straggler_mult=6.0, seed=3)
+    k = 1
+    rt = _runtime(api, tc, "ssp", compute_model=compute,
+                  policy_kw={"staleness": k},
+                  ltp=LTPConfig(staleness_comp=0.5))
+    rt.run(_data())
+    s = rt.tel.summary()
+    # admitted gradients never exceed the bound; over-stale ones are
+    # counted out, not silently folded in
+    assert s["staleness_max"] <= k
+    for e in rt.tel.of("stale_drop"):
+        assert e["staleness"] > k
+
+
+def test_async_staleness_recorded_and_weighted(setup):
+    api, tc = setup
+    compute = LognormalStragglerCompute(W, base=0.05, sigma=0.3,
+                                        straggler_prob=0.3,
+                                        straggler_mult=5.0, seed=11)
+    rt = _runtime(api, tc, "async", compute_model=compute)
+    rt.run(_data())
+    stale = [e["staleness"] for e in rt.tel.of("grad_arrived")]
+    assert max(stale) >= 1          # stragglers really produce staleness
+    assert rt.tel.summary()["n_applies"] == len(rt.history)
+
+
+# ---------------------------------------------------------------------------
+# policies (pure unit)
+# ---------------------------------------------------------------------------
+
+
+def _grad(worker, it, staleness=0):
+    return PendingGrad(worker=worker, iteration=it, t_ready=0.0,
+                       staleness=staleness, payload={"frac": 1.0})
+
+
+def test_bsp_policy_barrier():
+    p = make_policy("bsp")
+    p.bind(3)
+    assert p.may_start(0, 0) and not p.may_start(0, 1)
+    p.on_arrival(_grad(0, 0))
+    p.on_arrival(_grad(2, 0))
+    assert p.ready() == [] and p.pending_count() == 2
+    p.on_arrival(_grad(1, 0))
+    batch = p.ready()
+    assert [g.worker for g in batch] == [0, 1, 2]
+    p.on_applied(batch)
+    assert p.committed == 1 and p.may_start(0, 1)
+
+
+def test_ssp_policy_bound_ordering_and_drops():
+    p = make_policy("ssp", staleness=0, staleness_comp=0.5)
+    p.bind(2)
+    assert isinstance(p, SSPPolicy)
+    assert p.may_start(0, 0)
+    p.on_start(0, 0)
+    # worker 1 has not started iteration 0 yet -> worker 0 is gated
+    assert not p.may_start(0, 1)
+    p.on_start(1, 0)
+    assert p.may_start(0, 1)
+    p.on_arrival(_grad(0, 1, staleness=0))
+    p.on_arrival(_grad(1, 0, staleness=0))
+    p.on_arrival(_grad(1, 0, staleness=1))       # over the bound
+    batch = p.ready()
+    # MLFabric-style admission ordering: oldest iteration first
+    assert [(g.worker, g.iteration) for g in batch] == [(1, 0), (0, 1)]
+    assert len(p.drained_stale()) == 1 and p.drained_stale() == []
+    # staleness-damped weights (LTPConfig.staleness_comp wiring)
+    p2 = make_policy("ssp", staleness=2, staleness_comp=0.5)
+    p2.bind(2)
+    w = p2.weights([_grad(0, 0, staleness=1), _grad(1, 1, staleness=0)])
+    np.testing.assert_allclose(w, [1 / 1.5, 1.0])
+    # staleness_comp=0 -> uniform (classic SSP reduction)
+    assert make_policy("ssp", staleness=2).weights([_grad(0, 0, 1)]) is None
+
+
+def test_async_policy_never_blocks():
+    p = make_policy("async", damping=1.0)
+    p.bind(2)
+    assert isinstance(p, AsyncPolicy)
+    assert p.may_start(0, 99)
+    p.on_arrival(_grad(0, 5, staleness=3))
+    batch = p.ready()
+    assert len(batch) == 1 and p.ready() == []
+    np.testing.assert_allclose(p.weights(batch), [0.25])
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown aggregation policy"):
+        make_policy("2pc")
+    bsp = BSPPolicy()
+    assert make_policy(bsp) is bsp
+
+
+# ---------------------------------------------------------------------------
+# compute models
+# ---------------------------------------------------------------------------
+
+
+def test_compute_models():
+    det = DeterministicCompute(3, base=0.1, mults=[1.0, 2.0, 4.0])
+    assert det.sample(2, 9) == pytest.approx(0.4)
+    ln1 = LognormalStragglerCompute(3, base=0.05, seed=5)
+    ln2 = LognormalStragglerCompute(3, base=0.05, seed=5)
+    draws = [ln1.sample(w, i) for w in range(3) for i in range(4)]
+    assert draws == [ln2.sample(w, i) for w in range(3) for i in range(4)]
+    assert len(set(draws)) == len(draws)          # per-(w, i) independence
+    tr = TraceCompute(2, trace=[[0.1, 0.2], [0.3, 0.4]])
+    assert tr.sample(1, 0) == 0.2
+    assert tr.sample(0, 3) == 0.3                 # tiled modulo len(trace)
+    bc = TraceCompute(2, trace=[0.1, 0.2])        # 1-D broadcasts
+    assert bc.sample(1, 1) == 0.2
+    m = make_compute_model(None, 4, base=0.07)
+    assert isinstance(m, DeterministicCompute) and m.sample(0, 0) == 0.07
+    with pytest.raises(ValueError, match="unknown compute model"):
+        make_compute_model("gamma", 4)
+    with pytest.raises(ValueError):
+        TraceCompute(3, trace=[[0.1, 0.2]])
+
+
+# ---------------------------------------------------------------------------
+# staleness-weighted reduction (core/ltp_sync + config wiring)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comp", ["paper", "count", "expected"])
+def test_reduce_packet_stream_worker_weights(comp):
+    rng = np.random.default_rng(0)
+    pkts = jnp.asarray(rng.normal(size=(3, 6, 16)).astype(np.float32))
+    masks = jnp.asarray((rng.random((3, 6)) < 0.7).astype(np.float32))
+    wts = jnp.asarray([1.0, 0.5, 0.25])
+    ltp = LTPConfig(compensation=comp)
+    got = ls.reduce_packet_stream(pkts, masks, ltp, 3, expected_frac=0.7,
+                                  worker_weights=wts, backend="python")
+    # a weight scales the worker's gradient exactly
+    ref = ls.reduce_packet_stream(pkts * wts[:, None, None], masks, ltp, 3,
+                                  expected_frac=0.7, backend="python")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+    ker = ls.reduce_packet_stream(pkts, masks, ltp, 3, expected_frac=0.7,
+                                  worker_weights=wts, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ker),
+                               rtol=1e-5, atol=1e-6)
+    ones = ls.reduce_packet_stream(pkts, masks, ltp, 3, expected_frac=0.7,
+                                   worker_weights=jnp.ones(3),
+                                   backend="python")
+    base = ls.reduce_packet_stream(pkts, masks, ltp, 3, expected_frac=0.7,
+                                   backend="python")
+    np.testing.assert_allclose(np.asarray(ones), np.asarray(base))
+
+
+def test_staleness_weights_formula():
+    w = ls.staleness_weights([0.0, 1.0, 4.0], 0.5)
+    np.testing.assert_allclose(w, [1.0, 1 / 1.5, 1 / 3.0])
+    np.testing.assert_allclose(ls.staleness_weights([0.0, 3.0], 0.0),
+                               [1.0, 1.0])
+
+
+def test_staleness_comp_wires_into_async_policy(setup):
+    """LTPConfig.staleness_comp governs async damping unless the policy
+    instance overrides it explicitly."""
+    api, tc = setup
+    rt = _runtime(api, tc, "async", ltp=LTPConfig(staleness_comp=0.7))
+    assert rt.policy.damping == 0.7
+    rt0 = _runtime(api, tc, "async")          # staleness_comp defaults to 0
+    assert rt0.policy.damping == 0.0
+    assert rt0.policy.weights([_grad(0, 0, staleness=3)]) is None
+    over = _runtime(api, tc, AsyncPolicy(damping=1.0),
+                    ltp=LTPConfig(staleness_comp=0.7))
+    assert over.policy.damping == 1.0
+
+
+# ---------------------------------------------------------------------------
+# DES co-simulation
+# ---------------------------------------------------------------------------
+
+
+def test_des_bsp_cosim(setup):
+    api, tc = setup
+    rt = _runtime(api, tc, "bsp", transport="des")
+    h = rt.run(_data(), epoch_steps=3)
+    assert len(h) == STEPS and not rt.sim.truncated
+    assert all(0.0 < r["delivered"] <= 1.0 for r in h)
+    # the trunk-queue sampler (Sim.every + Topology.queue_depths) ran
+    net_samples = [e for e in rt.tel.of("queue") if "net_depth" in e]
+    assert net_samples and max(e["net_depth"] for e in net_samples) > 0
+
+
+def test_des_async_cosim(setup):
+    api, tc = setup
+    compute = DeterministicCompute(W, base=0.05,
+                                   mults=[1.0, 1.0, 1.0, 3.0])
+    rt = _runtime(api, tc, "async", transport="des", compute_model=compute)
+    h = rt.run(_data())
+    assert sum(r["n_grads"] for r in h) == W * STEPS
+    assert not rt.sim.truncated
+    # per-flow Early Close fired and produced partial deliveries
+    assert rt.tel.of("early_close")
+    assert any(r["delivered"] < 1.0 for r in h)
+
+
+def test_runtime_truncation_raises(setup):
+    api, tc = setup
+    rt = _runtime(api, tc, "bsp", transport="des")
+    with pytest.warns(RuntimeWarning, match="max_events"):
+        with pytest.raises(RuntimeError, match="truncated"):
+            rt.run(_data(), max_events=50)
+
+
+def test_runtime_rejects_unknown_transport(setup):
+    api, tc = setup
+    with pytest.raises(ValueError, match="unknown transport"):
+        _runtime(api, tc, "bsp", transport="carrier-pigeon")

@@ -6,8 +6,17 @@ Compares freshly generated records against the committed baselines:
                         (default 2.0: the CI budget for runner jitter);
 * ``*_events_per_sec`` / ``*_gbps`` / ``*_speedup``
                       — FAIL when current < baseline / ``--max-ratio``
-                        (throughput floors: the committed acceptance
+                        (throughput ratchets: the committed acceptance
                         metrics must not silently collapse);
+* absolute events/sec floors (``FLOORS``)
+                      — FAIL when current < floor x ``--floor-scale``.
+                        Unlike the relative rules these do not drift
+                        with whatever baseline was last committed: the
+                        runtime-DES fast path (DESIGN.md §9) is gated
+                        at a minimum absolute throughput, so a sequence
+                        of small "within budget" regressions can never
+                        ratchet the baseline back down to the pre-§9
+                        event engine;
 * metric present in the baseline but missing from the current record
                       — FAIL (a benchmark quietly dropped).
 
@@ -17,8 +26,8 @@ the next commit of the JSONs).
 Wall-clocks are machine-dependent: the 2x budget is what absorbs the
 authoring-machine-vs-CI-runner gap, and a host mismatch between the two
 records is printed as a warning so a tripped gate is easy to triage.
-The in-run *relative* metrics (``grid64_coalesce_speedup``, the
-events/sec floors) are machine-independent and carry the real signal.
+Every failure line prints the per-metric delta (absolute and relative)
+so the run page is diagnosable without re-running anything.
 
   python -m benchmarks.check_regression \
       --baseline-dir /tmp/bench-baseline --current-dir . \
@@ -43,6 +52,22 @@ RULES: Tuple[Tuple[str, str], ...] = (
     ("_speedup", "up"),
 )
 
+#: absolute events/sec floors — set at roughly HALF the value measured
+#: on the 2-core authoring container (BENCH_*.json), so a healthy CI
+#: runner clears them with margin while a return to the pre-§9 runtime
+#: (per-packet events, per-runtime recompiles, O(pipes) telemetry —
+#: ~300-500 ev/s on the same container) trips them immediately.
+FLOORS: Dict[str, float] = {
+    "runtime_des_events_per_sec": 2500.0,
+    "runtime_des64_events_per_sec": 1200.0,
+    "grid64_ltp_ps1_events_per_sec": 25_000.0,
+    "grid64_ltp_ps4_events_per_sec": 25_000.0,
+    "grid64_cubic_ps1_events_per_sec": 25_000.0,
+    "grid64_cubic_ps4_events_per_sec": 25_000.0,
+    "grid64_ref_coalesced_events_per_sec": 25_000.0,
+    "grid64_ref_per_packet_events_per_sec": 4000.0,
+}
+
 
 def _load(path: str) -> dict:
     with open(path) as f:
@@ -55,8 +80,12 @@ def _metrics(doc: dict) -> Dict[str, float]:
 
 
 def compare(current: Dict[str, float], baseline: Dict[str, float],
-            max_ratio: float) -> List[str]:
-    """Returns a list of human-readable failure lines (empty = pass)."""
+            max_ratio: float, floor_scale: float = 1.0) -> List[str]:
+    """Returns a list of human-readable failure lines (empty = pass).
+
+    Failure lines carry the per-metric delta (current - baseline, and
+    the ratio) so a tripped gate is diagnosable from the log alone.
+    """
     failures = []
     for key, base in sorted(baseline.items()):
         direction = next((d for suf, d in RULES if key.endswith(suf)), None)
@@ -70,13 +99,32 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
         ratio = cur / base
         ok = ratio <= max_ratio if direction == "down" else \
             ratio >= 1.0 / max_ratio
-        mark = "ok" if ok else "REGRESSION"
+        floor = FLOORS.get(key)
+        floor_ok = floor is None or cur >= floor * floor_scale
+        mark = "ok" if ok and floor_ok else "REGRESSION"
         print(f"  {key:45s} base={base:<12g} cur={cur:<12g} "
               f"x{ratio:.2f} [{mark}]")
         if not ok:
             failures.append(
                 f"{key}: {cur:g} vs baseline {base:g} "
-                f"(x{ratio:.2f}, budget x{max_ratio:g} {direction})")
+                f"(delta {cur - base:+g}, x{ratio:.2f}, "
+                f"budget x{max_ratio:g} {direction})")
+        if not floor_ok:
+            failures.append(
+                f"{key}: {cur:g} below absolute floor "
+                f"{floor * floor_scale:g} "
+                f"(delta {cur - floor * floor_scale:+g}; the §9 runtime "
+                f"fast path must not silently ratchet away)")
+    # floors also apply to metrics with no baseline entry yet
+    for key, floor in sorted(FLOORS.items()):
+        if key in baseline or key not in current:
+            continue
+        cur = current[key]
+        if cur < floor * floor_scale:
+            failures.append(
+                f"{key}: {cur:g} below absolute floor "
+                f"{floor * floor_scale:g} (no baseline; delta "
+                f"{cur - floor * floor_scale:+g})")
     return failures
 
 
@@ -89,6 +137,9 @@ def main(argv=None) -> int:
     ap.add_argument("--current-dir", default=".",
                     help="directory holding the fresh JSONs (default: .)")
     ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--floor-scale", type=float, default=1.0,
+                    help="multiplier on the absolute events/sec floors "
+                         "(derate for known-slow runners)")
     args = ap.parse_args(argv)
     files = args.files or list(DEFAULT_FILES)
     all_failures = []
@@ -111,7 +162,7 @@ def main(argv=None) -> int:
                   f"compare different machines")
         print(f"{name}:")
         all_failures += compare(_metrics(cur_doc), _metrics(base_doc),
-                                args.max_ratio)
+                                args.max_ratio, args.floor_scale)
     if all_failures:
         print("\nperf regression gate FAILED:", file=sys.stderr)
         for f in all_failures:

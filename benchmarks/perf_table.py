@@ -1,9 +1,12 @@
-"""Render the README perf table from ``BENCH_netsim.json``.
+"""Render the README perf table from the committed BENCH records.
 
-  PYTHONPATH=src python -m benchmarks.perf_table [path/to/BENCH_netsim.json]
+  PYTHONPATH=src python -m benchmarks.perf_table \
+      [path/to/BENCH_netsim.json [path/to/BENCH_runtime.json]]
 
 Prints a GitHub-flavored markdown table; the README "Performance" section
-is this script's output, regenerated whenever the baseline is refreshed.
+is this script's output, regenerated whenever the baselines are
+refreshed. Netsim rows come from ``BENCH_netsim.json``; the runtime DES
+rows (the §9 fast-path acceptance metrics) from ``BENCH_runtime.json``.
 """
 from __future__ import annotations
 
@@ -14,10 +17,13 @@ import sys
 from benchmarks.sweep_scenarios import REPO_ROOT
 
 
-def render(path: str) -> str:
+def _metrics(path: str) -> dict:
     with open(path) as f:
-        doc = json.load(f)
-    m = doc["metrics"]
+        return json.load(f).get("metrics", {})
+
+
+def render(path: str, runtime_path: str = None) -> str:
+    m = _metrics(path)
     k = m.get("grid64_coalesce", "?")
     lines = [
         "| cell (64 workers, 2 MB model) | wall s | sim packet-events/s |",
@@ -41,13 +47,28 @@ def render(path: str) -> str:
     if sweep is not None:
         lines.append(f"| small scenario grid (4 protocols x 7 cells) "
                      f"| {sweep:g} | — |")
+    if runtime_path and os.path.exists(runtime_path):
+        r = _metrics(runtime_path)
+        des = r.get("runtime_des_events_per_sec")
+        cold = r.get("runtime_des_cold_events_per_sec")
+        if des:
+            cold_s = f", cold {cold:,.0f}" if cold else ""
+            lines.append(f"| runtime DES co-sim, 8 workers bsp/ltp (warm"
+                         f"{cold_s}) | — | {des:,.0f} |")
+        des64 = r.get("runtime_des64_events_per_sec")
+        if des64:
+            k64 = r.get("runtime_des64_coalesce", "?")
+            lines.append(f"| runtime DES co-sim, 64 workers bsp/ltp "
+                         f"(trains of {k64}) | — | {des64:,.0f} |")
     return "\n".join(lines)
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else os.path.join(REPO_ROOT, "BENCH_netsim.json")
-    print(render(path))
+    runtime_path = argv[1] if len(argv) > 1 else os.path.join(
+        REPO_ROOT, "BENCH_runtime.json")
+    print(render(path, runtime_path))
     return 0
 
 

@@ -1,0 +1,85 @@
+"""cProfile dump for the runtime DES cell (CI diagnosability artifact).
+
+Runs the same w=8 bsp/ltp packet-level co-simulation cell that
+``runtime_sweep`` gates (warm: one unprofiled run first, so the profile
+shows the steady state the events/sec floor is measured in, not one-time
+jit compilation), and writes the top-N cumulative-time functions to
+``profile_runtime_des.txt``. CI's perf-smoke job uploads the file as an
+artifact — when the regression gate trips, the hot path that moved is
+readable straight from the run page.
+
+  PYTHONPATH=src python -m benchmarks.profile_runtime
+  PYTHONPATH=src python -m benchmarks.profile_runtime --out prof.txt --top 40
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import pstats
+import time
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net import simcore
+from repro.optim import make_optimizer
+from repro.runtime import ClusterRuntime, LognormalStragglerCompute
+
+from benchmarks.runtime_sweep import COMPUTE_KW
+
+TOP_N = 25
+
+
+def _cell(api, tc, net, w, steps, seed=11):
+    compute = LognormalStragglerCompute(w, base=0.05, seed=seed,
+                                        **COMPUTE_KW)
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), net,
+        n_workers=w, protocol="ltp", policy="bsp", compute_model=compute,
+        compute_time=0.05, seed=seed, transport="des")
+    rt.run(batches(SyntheticCIFAR(seed=3), tc.batch, steps),
+           epoch_steps=max(1, steps // 2))
+
+
+def run(out: str = "profile_runtime_des.txt", top: int = TOP_N) -> str:
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    net = NetConfig(10, 1, 0.001, 4096)
+    w, steps = 8, 2
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    _cell(api, tc, net, w, steps)            # warm jit caches + pools
+    simcore.PERF.reset()
+    prof = cProfile.Profile()
+    t0 = time.time()
+    prof.enable()
+    _cell(api, tc, net, w, steps)
+    prof.disable()
+    wall = time.time() - t0
+    buf = io.StringIO()
+    buf.write(
+        f"runtime DES cell (w={w}, bsp, ltp, steps={steps}) — warm run\n"
+        f"wall={wall:.3f}s packet_events={simcore.PERF.packets} "
+        f"heap_events={simcore.PERF.events} "
+        f"events_per_sec={simcore.PERF.packets / max(wall, 1e-9):,.0f}\n\n")
+    stats = pstats.Stats(prof, stream=buf)
+    stats.sort_stats("cumulative").print_stats(top)
+    with open(out, "w") as f:
+        f.write(buf.getvalue())
+    print(buf.getvalue().splitlines()[0])
+    print(f"wrote {out} (top {top} by cumulative time)")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="profile_runtime_des.txt")
+    ap.add_argument("--top", type=int, default=TOP_N)
+    args = ap.parse_args(argv)
+    run(out=args.out, top=args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,14 +9,22 @@ becomes measurable: bsp pays the per-iteration max over workers, while
 async/ssp overlap the stragglers — their sim-time speedups over bsp on
 the same seed are the acceptance metrics.
 
-Two gate metrics land in ``BENCH_runtime.json`` (diffed by
-``benchmarks.check_regression`` in CI):
+Gate metrics landing in ``BENCH_runtime.json`` (diffed and
+floor-checked by ``benchmarks.check_regression`` in CI):
 
   runtime_async_vs_bsp_speedup / runtime_ssp_vs_bsp_speedup
       simulated-time ratio bsp/policy at the largest swept cluster
       (machine-independent: every stream is seeded);
   runtime_des_events_per_sec
-      packet-level co-simulation throughput of one DES cell.
+      packet-level co-simulation throughput of the w=8 DES cell,
+      measured warm (the cold run pays one-time jit compilation the
+      step cache then amortizes across every later runtime — see
+      runtime/step.py); the paired ``runtime_des_cold_events_per_sec``
+      records the unwarmed figure;
+  runtime_des64_events_per_sec
+      the DES-at-scale cell: 64 workers, coalesced packet trains —
+      the shape the event-engine/pooling/jit-cache fast path
+      (DESIGN.md §9) exists to make routine.
 
   PYTHONPATH=src python -m benchmarks.runtime_sweep --quick
   PYTHONPATH=src python -m benchmarks.run --only runtime_sweep
@@ -24,6 +32,7 @@ Two gate metrics land in ``BENCH_runtime.json`` (diffed by
 from __future__ import annotations
 
 import argparse
+import gc
 import time
 
 from repro.config import LTPConfig, NetConfig, TrainConfig
@@ -75,6 +84,7 @@ def _cell(api, tc, net, w, policy, proto, steps, *, transport="analytic",
         "blocked_s": s["blocked_s"],
     }
     if transport == "des":
+        row["coalesce"] = rt.net_des.coalesce
         row["events_per_sec"] = round(
             simcore.PERF.packets / max(wall, 1e-9))
     return row
@@ -107,12 +117,39 @@ def run(quick: bool = True):
         metrics[f"runtime_w{w_top}_async_ltp_vs_bsp"]
     metrics["runtime_ssp_vs_bsp_speedup"] = \
         metrics[f"runtime_w{w_top}_ssp_ltp_vs_bsp"]
-    # one packet-level co-simulation cell: DES throughput under the gate
-    tc = TrainConfig(batch=4 * sizes[0], lr=0.05, steps=max(2, steps // 4))
-    des_row = _cell(api, tc, net, sizes[0], "bsp", "ltp",
-                    max(2, steps // 4), transport="des")
+    # packet-level co-simulation cells: DES throughput under the gate.
+    # The first (cold) run pays one-time jit compilation the grid above
+    # didn't already cover plus flow-pool construction; the gated figure
+    # is the best of two warm reruns — that's what every later runtime
+    # in the process actually pays (runtime/step.py jit cache,
+    # DESIGN.md §9), measured best-of like every kernel microbench.
+    def des_cell(w, tc, steps):
+        gc.collect()
+        cold = _cell(api, tc, net, w, "bsp", "ltp", steps, transport="des")
+        warm = []
+        for _ in range(2):
+            gc.collect()
+            warm.append(_cell(api, tc, net, w, "bsp", "ltp", steps,
+                              transport="des"))
+        return cold, max(warm, key=lambda r: r["events_per_sec"])
+
+    des_steps = max(2, steps // 4)
+    tc = TrainConfig(batch=4 * sizes[0], lr=0.05, steps=des_steps)
+    cold_row, des_row = des_cell(sizes[0], tc, des_steps)
+    metrics["runtime_des_cold_events_per_sec"] = cold_row["events_per_sec"]
     rows.append(des_row)
     metrics["runtime_des_events_per_sec"] = des_row["events_per_sec"]
+    # DES at scale: 64 workers, coalesced trains — the cell shape the
+    # §9 fast path exists to make routine
+    w64 = 64
+    tc64 = TrainConfig(batch=4 * w64, lr=0.05, steps=2)
+    cold64_row, des64_row = des_cell(w64, tc64, 2)
+    des64_row["scenario"] = "runtime_des64"
+    rows.append(des64_row)
+    metrics["runtime_des64_cold_events_per_sec"] = \
+        cold64_row["events_per_sec"]
+    metrics["runtime_des64_events_per_sec"] = des64_row["events_per_sec"]
+    metrics["runtime_des64_coalesce"] = des64_row["coalesce"]
     metrics["runtime_sweep_wall_s"] = round(time.time() - t_start, 3)
     write_bench(metrics, quick, "BENCH_runtime.json")
     emit(rows, "runtime_sweep")

@@ -137,10 +137,14 @@ class LTPConfig:
     staleness_comp: float = 0.0
     error_feedback: bool = False     # beyond-paper
     critical_per_tensor: int = 1     # first/last packet(s) of each tensor marked critical
-    # PS-side aggregation backend (DESIGN.md §7): "python" is the jnp
+    # PS-side aggregation backend (DESIGN.md §7/§9): "python" is the jnp
     # reference; "pallas" routes the bubble-fill + masked multi-worker
-    # reduction through the fused kernels in ``repro.kernels``.
-    sync_backend: str = "python"     # python | pallas
+    # reduction through the fused kernels in ``repro.kernels``; "auto"
+    # picks per call site — python below the measured crossover stream
+    # size (``ltp_sync.AUTO_CROSSOVER_ELEMS``), pallas above it, and
+    # always python in interpret mode — so the kernel path can never be
+    # a regression.
+    sync_backend: str = "python"     # python | pallas | auto
     # Pallas interpret mode: True executes kernel bodies in the Python
     # interpreter (the only option on CPU); set False on a real TPU to
     # compile the fused tiles.

@@ -53,6 +53,29 @@ _DP_ORDER = ("pod", "data")
 # backend dispatch: the PS hot loop as fused kernels or jnp reference
 # ----------------------------------------------------------------------------
 
+#: python/pallas crossover in stream elements (W * n_packets * payload)
+#: for COMPILED kernels (``kernel_interpret=False``): below it the jnp
+#: reference wins on dispatch overhead, above it the fused single-pass
+#: tiles win on memory traffic. In interpret mode the kernel body runs
+#: in the Python interpreter and never beats jnp, so "auto" always
+#: resolves to python there — measured by ``benchmarks.kernel_bench``
+#: (``sync_crossover_elems`` in BENCH_kernels.json).
+AUTO_CROSSOVER_ELEMS = 1 << 22
+
+
+def resolve_backend(backend: str, n_elems: int,
+                    interpret: bool = True) -> str:
+    """Resolve ``sync_backend="auto"`` to a concrete backend for a
+    stream of ``n_elems`` elements; passes explicit backends through.
+    The guarantee the benchmarks gate: auto is never a regression — it
+    picks python below the measured crossover and pallas above it, and
+    interpret-mode kernels (CPU) never win, so auto==python there."""
+    if backend != "auto":
+        return backend
+    if interpret or n_elems < AUTO_CROSSOVER_ELEMS:
+        return "python"
+    return "pallas"
+
 
 def apply_delivery(packets, mask, scale=None, *, backend: str = "python",
                    interpret: bool = True):
@@ -60,8 +83,10 @@ def apply_delivery(packets, mask, scale=None, *, backend: str = "python",
 
     packets: (n_packets, payload); mask/scale: (n_packets,). The pallas
     backend runs ``kernels.dropfill`` through the ``ops`` padding wrappers
-    (arbitrary geometry in, lane-aligned tiles inside).
+    (arbitrary geometry in, lane-aligned tiles inside); ``"auto"``
+    resolves via ``resolve_backend`` on the stream size.
     """
+    backend = resolve_backend(backend, packets.size, interpret)
     if backend == "pallas":
         m = mask if scale is None else mask * scale
         return kops.ltp_dropfill(packets, m, interpret=interpret)
@@ -111,6 +136,7 @@ def reduce_packet_stream(packets_w, masks_w, ltp: LTPConfig, n_workers: int,
     """
     backend = backend or ltp.sync_backend
     interpret = ltp.kernel_interpret if interpret is None else interpret
+    backend = resolve_backend(backend, packets_w.size, interpret)
     comp = ltp.compensation
     if worker_weights is not None:
         w_ = jnp.asarray(worker_weights, jnp.float32)

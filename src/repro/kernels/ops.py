@@ -5,6 +5,16 @@ block-multiple packet counts) and strip it on the way out, so callers can
 use arbitrary packet geometries. ``interpret=True`` (the default here)
 executes the kernel body in Python on CPU; on a real TPU pass
 ``interpret=False``.
+
+Dispatch cache (DESIGN.md §9): each (interpret, donate) variant of a
+wrapper is built exactly once through ``_variant``; within a variant,
+``jax.jit`` keys compiled executables by shape, so repeated calls with
+the same packet geometry pay zero retrace/recompile. ``donate=True``
+donates the packet-stream buffer to the kernel (the output aliases the
+input's memory on backends that support aliasing — TPU; a no-op in
+interpret mode) — the caller's array is consumed, so only opt in when
+the stream is dead after the call (e.g. a PS hot loop that immediately
+overwrites it).
 """
 from __future__ import annotations
 
@@ -28,12 +38,22 @@ def _pad_to(x, m: int, axis: int):
     return jnp.pad(x, widths), pad
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ltp_dropfill(packets, mask, scale=None, *, interpret: bool = True):
-    """packets: (n_packets, payload) any-float; mask: (n_packets,) {0,1};
-    scale: optional (n_packets,) compensation. Zero-fills lost packets."""
-    if scale is None:
-        scale = jnp.ones_like(mask)
+@functools.lru_cache(maxsize=None)
+def _variant(fn_name: str, interpret: bool, donate: bool, *static):
+    """Shape-keyed jit cache: one jitted callable per (wrapper,
+    interpret, donate, static-args) variant; jax.jit's own cache keys
+    the compiled executable by input shapes under it."""
+    core = {
+        "dropfill": _dropfill_core,
+        "packet_reduce": _packet_reduce_core,
+        "randomk": _randomk_core,
+    }[fn_name]
+    kw = {"compensation": static[0]} if fn_name == "packet_reduce" else {}
+    fn = functools.partial(core, interpret=interpret, **kw)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _dropfill_core(packets, mask, scale, *, interpret: bool):
     x, pad_p = _pad_to(packets.astype(jnp.float32), 128, 1)
     x, pad_n = _pad_to(x, _df.BLOCK_P, 0)
     m, _ = _pad_to(mask.astype(jnp.float32), _df.BLOCK_P, 0)
@@ -43,10 +63,18 @@ def ltp_dropfill(packets, mask, scale=None, *, interpret: bool = True):
     return out.astype(packets.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("compensation", "interpret"))
-def ltp_packet_reduce(packets, mask, *, compensation: str = "paper",
-                      interpret: bool = True):
-    """packets: (W, n_packets, payload); mask: (W, n_packets)."""
+def ltp_dropfill(packets, mask, scale=None, *, interpret: bool = True,
+                 donate: bool = False):
+    """packets: (n_packets, payload) any-float; mask: (n_packets,) {0,1};
+    scale: optional (n_packets,) compensation. Zero-fills lost packets."""
+    if scale is None:
+        scale = jnp.ones_like(mask)
+    return _variant("dropfill", bool(interpret), bool(donate))(
+        packets, mask, scale)
+
+
+def _packet_reduce_core(packets, mask, *, compensation: str,
+                        interpret: bool):
     x, _ = _pad_to(packets.astype(jnp.float32), 128, 2)
     x, _ = _pad_to(x, _pr.BLOCK_P, 1)
     m, _ = _pad_to(mask.astype(jnp.float32), _pr.BLOCK_P, 1)
@@ -55,9 +83,14 @@ def ltp_packet_reduce(packets, mask, *, compensation: str = "paper",
     return out[: packets.shape[1], : packets.shape[2]]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def randomk_sparsify(x, u, k_frac, *, interpret: bool = True):
-    """Elementwise Random-k keep mask via uniforms ``u`` (same shape)."""
+def ltp_packet_reduce(packets, mask, *, compensation: str = "paper",
+                      interpret: bool = True, donate: bool = False):
+    """packets: (W, n_packets, payload); mask: (W, n_packets)."""
+    return _variant("packet_reduce", bool(interpret), bool(donate),
+                    compensation)(packets, mask)
+
+
+def _randomk_core(x, u, k_frac, *, interpret: bool):
     orig_shape = x.shape
     flat = x.reshape(-1)
     uf = u.reshape(-1)
@@ -72,3 +105,8 @@ def randomk_sparsify(x, u, k_frac, *, interpret: bool = True):
     # padded uniforms = 2.0 > k  ->  padding never kept
     out = _rk.randomk(flat, uf, k_frac, interpret=interpret)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def randomk_sparsify(x, u, k_frac, *, interpret: bool = True):
+    """Elementwise Random-k keep mask via uniforms ``u`` (same shape)."""
+    return _variant("randomk", bool(interpret), False)(x, u, k_frac)

@@ -35,9 +35,14 @@ class LTPFlowReceiver:
         self.send_ack = send_ack
         self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
         self.flow = flow
+        self.received: Set[int] = set()
+        self.reset()
+
+    def reset(self) -> None:
+        """Cold-start flow state in place (flow pooling, DESIGN.md §9)."""
         self.n: Optional[int] = None
         self.critical: Optional[np.ndarray] = None
-        self.received: Set[int] = set()
+        self.received.clear()
         self.t_start: Optional[float] = None
         self.t_full: Optional[float] = None
         self.closed = False
@@ -67,7 +72,11 @@ class LTPFlowReceiver:
             self.critical = pkt.meta.get("critical")
             if self.t_start is None:
                 self.t_start = t
-            ack = Packet(self.flow, -1, 41, kind="ack", meta={})
+            # echo the sender's flow generation so a pooled sender can
+            # tell this reg-ack from one aimed at a previous life
+            ack = Packet(self.flow, -1, 41, kind="ack",
+                         meta={"g": pkt.meta.get("g")}
+                         if "g" in pkt.meta else {})
         else:
             self.received.add(pkt.seq)
             ack = Packet(self.flow, pkt.seq, 41, kind="ack",
@@ -142,13 +151,39 @@ class PSGatherReceiver:
         self.send_stop = send_stop
         self.on_close = on_close
         self.flows: Dict[int, LTPFlowReceiver] = {}
-        self.t0 = sim.now
-        self.closed = False
-        self.close_time: Optional[float] = None
+        self.gen = 0
+        #: pooled-transport hook, called as ``on_stale(flow, gen)`` when
+        #: data from an older flow generation arrives: the transport
+        #: re-stops the orphaned sender if it is still living that
+        #: generation (its original stop was lost in flight) — without
+        #: this a recycled gather would silently drop the straggler's
+        #: retransmissions and the orphan would pump forever.
+        self.on_stale: Optional[Callable[[int, int], None]] = None
+        self._check_eids: List[int] = []
         for f in flows:
             self.flows[f] = LTPFlowReceiver(sim, lambda p: None, f)
-        sim.at(self.t0 + lt_threshold, self._check)
-        sim.at(self.t0 + deadline, self._check)
+        self.reset()
+
+    def reset(self, gen: Optional[int] = None) -> None:
+        """Re-arm this gather for a fresh iteration (flow pooling): cold
+        flow state, new t0, fresh LT/deadline check timers (stale ones
+        are cancelled), and a bumped generation so deliveries from the
+        previous iteration are dropped instead of polluting the masks."""
+        if gen is not None:
+            self.gen = gen
+        for fr in self.flows.values():
+            fr.reset()
+        self.t0 = self.sim.now
+        self.closed = False
+        self.close_time: Optional[float] = None
+        for eid in self._check_eids:
+            self.sim.cancel(eid)
+        self._check_eids = [self.sim.at(self.t0 + self.lt, self._check),
+                            self.sim.at(self.t0 + self.deadline, self._check)]
+
+    def _stale(self, pkt: Packet) -> bool:
+        g = pkt.meta.get("g") if isinstance(pkt.meta, dict) else None
+        return g is not None and g != self.gen
 
     def attach_ack(self, flow: int, send_ack: Callable[[Packet], None]):
         self.flows[flow].send_ack = send_ack
@@ -160,6 +195,10 @@ class PSGatherReceiver:
     def on_data(self, pkt: Packet):
         fr = self.flows.get(pkt.flow)
         if fr is None:
+            return
+        if self._stale(pkt):
+            if self.on_stale is not None:
+                self.on_stale(pkt.flow, pkt.meta.get("g"))
             return
         if self.closed:
             # data after close means the flow's "stop" was lost in flight:
@@ -173,6 +212,15 @@ class PSGatherReceiver:
         """Coalesced delivery: all packets in a train share one event time,
         so the close rule is evaluated once after the whole train (identical
         to per-packet evaluation at equal ``sim.now``)."""
+        stale = [(p.flow, p.meta.get("g")) for p, _ in items
+                 if self._stale(p)]
+        if stale:
+            if self.on_stale is not None:
+                for flow, g in dict.fromkeys(stale):
+                    self.on_stale(flow, g)
+            items = [(p, t) for p, t in items if not self._stale(p)]
+        if not items:
+            return
         if self.closed:
             for flow in {p.flow for p, _ in items}:
                 if flow in self.flows:
@@ -284,6 +332,11 @@ class ShardedGatherReceiver:
 
     def shard(self, ps: int) -> PSGatherReceiver:
         return self.shards[ps]
+
+    def reset(self, gen: Optional[int] = None) -> None:
+        """Re-arm every shard for a fresh iteration (flow pooling)."""
+        for s in self.shards:
+            s.reset(gen)
 
     @property
     def all_closed(self) -> bool:

@@ -12,11 +12,22 @@ emit bursts as coalesced trains through ``Pipe.send_train`` and consume
 batched ACK trains via ``on_ack_train`` — K packets per heap event in
 both directions. BBR keeps its per-packet pacing clock (its control law
 is the inter-send spacing itself) and ignores ``train_len``.
+
+Flow pooling (DESIGN.md §9): every sender supports ``reset(gen)`` — it
+restores cold-start state in place so the cluster runtime can reuse one
+sender object per (worker, shard) across iterations instead of
+reconstructing the whole flow graph each round. ``gen`` is a flow
+generation stamped into every outgoing packet's ``meta["g"]`` and echoed
+back in ACKs; state machines silently drop packets from another
+generation, so deliveries still in flight when a flow is recycled cannot
+leak into the next round. Un-pooled callers never pass ``gen`` and both
+sides stay at generation 0.
 """
 from __future__ import annotations
 
 import collections
 import math
+from functools import partial
 from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -70,10 +81,16 @@ class RateEstimator:
 
     def __init__(self, sim: Sim):
         self.sim = sim
-        self.rtprop = math.inf
         self._acks: Deque[Tuple[float, int]] = collections.deque()
-        self._ack_bytes = 0
         self._bw_samples: Deque[Tuple[float, float]] = collections.deque()
+        self.reset()
+
+    def reset(self) -> None:
+        """Cold-start state in place (flow pooling, DESIGN.md §9)."""
+        self.rtprop = math.inf
+        self._acks.clear()
+        self._ack_bytes = 0
+        self._bw_samples.clear()
         self._btlbw = 0.0
 
     def on_ack(self, nbytes: int, rtt: float):
@@ -121,9 +138,22 @@ class TcpReceiver:
         self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
         self.flow = flow
         self.received: Set[int] = set()
+        self.gen = 0
+        self.reset()
+
+    def reset(self, gen: Optional[int] = None,
+              n_total: Optional[int] = None) -> None:
+        """Cold-start receiver state in place (flow pooling)."""
+        if gen is not None:
+            self.gen = gen
+        self.received.clear()
         self.next_expected = 0
         self.complete_time: Optional[float] = None
-        self.n_total: Optional[int] = None
+        self.n_total: Optional[int] = n_total
+
+    def _stale(self, pkt: Packet) -> bool:
+        g = pkt.meta.get("g") if isinstance(pkt.meta, dict) else None
+        return g is not None and g != self.gen
 
     def _ack_for(self, pkt: Packet) -> Packet:
         if pkt.kind == "reg":
@@ -136,6 +166,8 @@ class TcpReceiver:
                       meta={"cum": self.next_expected, "echo": pkt.meta})
 
     def on_data(self, pkt: Packet):
+        if self._stale(pkt):
+            return
         self.send_ack(self._ack_for(pkt))
         if self.n_total is not None and self.next_expected >= self.n_total \
                 and self.complete_time is None:
@@ -146,10 +178,14 @@ class TcpReceiver:
         per-packet arrival time, and the ACKs go back as one train."""
         acks = []
         for pkt, t in items:
+            if self._stale(pkt):
+                continue
             acks.append(self._ack_for(pkt))
             if self.n_total is not None and self.next_expected >= self.n_total \
                     and self.complete_time is None:
                 self.complete_time = t
+        if not acks:
+            return
         if self.send_ack_train is not None:
             self.send_ack_train(acks)
         else:
@@ -171,28 +207,47 @@ class _TcpBase:
         self.deliver = deliver
         self.deliver_train: Optional[Callable[[TrainItems], None]] = None
         self.train_len = max(1, int(train_len))
-        self._train_buf: Optional[List[Packet]] = None
-        self._in_ack_train = False
-        self._rto_dirty = False
         self.n = n_packets
         self.flow = flow
         self.mss = mss
         self.on_done = on_done
+        self.inflight: Set[int] = set()
+        self.sacked: Set[int] = set()
+        self.retx: collections.deque = collections.deque()
+        self.sent_time: Dict[int, float] = {}
+        self.gen = 0
+        self.rto_event: Optional[int] = None
+        self.reset()
+
+    def reset(self, gen: Optional[int] = None) -> None:
+        """Restore cold-start sender state in place (flow pooling).
+
+        ``gen`` bumps the flow generation: stale ACKs from a previous
+        life of this sender (echoing an older ``meta["g"]``) are dropped
+        on arrival instead of corrupting the fresh state machine.
+        """
+        if gen is not None:
+            self.gen = gen
+        self._train_buf = None
+        self._in_ack_train = False
+        self._rto_dirty = False
         self.cwnd = 10.0
         self.ssthresh = math.inf
         self.next_new = 0
         self.cum = 0
         self.dup = 0
         self.recover = -1
-        self.inflight: Set[int] = set()
-        self.sacked: Set[int] = set()
-        self.retx: collections.deque = collections.deque()
+        self.inflight.clear()
+        self.sacked.clear()
+        self.retx.clear()
         self.marked: Set[int] = set()   # lost-marked this recovery episode
         self._scan_hi = 0               # scoreboard scan high-water mark
-        self.sent_time: Dict[int, float] = {}
+        self.sent_time.clear()
         self.srtt: Optional[float] = None
         self.rttvar = 0.0
-        self.rto_event: Optional[int] = None
+        if self.rto_event is not None:
+            self.sim.cancel(self.rto_event)
+        self.rto_event = None
         self.done = False
         self.start_time: Optional[float] = None
         self.bytes_acked = 0
@@ -267,7 +322,7 @@ class _TcpBase:
 
     def _send(self, seq: int):
         pkt = Packet(self.flow, seq, self.mss, kind="data",
-                     meta={"t": self.sim.now})
+                     meta={"t": self.sim.now, "g": self.gen})
         self.inflight.add(seq)
         self.sent_time[seq] = self.sim.now
         if self._train_buf is not None:
@@ -316,8 +371,10 @@ class _TcpBase:
     def on_ack(self, pkt: Packet):
         if self.done:
             return
-        cum = pkt.meta["cum"]
         echo = pkt.meta.get("echo") or {}
+        if echo.get("g", self.gen) != self.gen:
+            return          # ACK for a previous life of this pooled flow
+        cum = pkt.meta["cum"]
         if "t" in echo:
             rtt = self.sim.now - echo["t"]
             if self.srtt is None:
@@ -408,6 +465,11 @@ class CubicSender(_TcpBase):
         self.wmax = 0.0
         self.epoch: Optional[float] = None
 
+    def reset(self, gen: Optional[int] = None) -> None:
+        super().reset(gen)
+        self.wmax = 0.0
+        self.epoch = None
+
     def on_loss_cut(self):
         self.wmax = self.cwnd
         self.cwnd = max(2.0, self.cwnd * self.BETA)
@@ -436,14 +498,23 @@ class BBRSender(_TcpBase):
     GAINS = [1.25, 0.75, 1, 1, 1, 1, 1, 1]
 
     def __init__(self, *a, **kw):
+        self.est = None
         super().__init__(*a, **kw)
-        self.est = RateEstimator(self.sim)
+
+    def reset(self, gen: Optional[int] = None) -> None:
+        super().reset(gen)
+        if self.est is None:
+            self.est = RateEstimator(self.sim)
+        else:
+            self.est.reset()
         self.phase = 0
         self.phase_start = 0.0
         self.startup = True
         self.full_bw = 0.0
         self.full_cnt = 0
         self.next_send_time = 0.0
+        if getattr(self, "pacing_timer", None) is not None:
+            self.sim.cancel(self.pacing_timer)
         self.pacing_timer: Optional[int] = None
         self.round_end_seq = 0  # cum level that closes the current round
 
@@ -493,10 +564,14 @@ class BBRSender(_TcpBase):
             return
         self._send(seq)
         self.next_send_time = self.sim.now + self.mss * 8.0 / rate
-        self.sim.at(self.next_send_time, self._pump)
+        g = self.gen
+        self.sim.at(self.next_send_time,
+                    lambda: self.gen == g and self._pump())
 
     def on_ack(self, pkt: Packet):
         echo = pkt.meta.get("echo") or {}
+        if echo.get("g", self.gen) != self.gen:
+            return          # ACK for a previous life of this pooled flow
         if "t" in echo:
             self.est.on_ack(self.mss, self.sim.now - echo["t"])
         if self.startup and pkt.meta["cum"] >= self.round_end_seq:
@@ -543,44 +618,80 @@ class LTPSender:
             crit = crit.copy()
             crit[0] = crit[-1] = True
         self.critical = crit
-        self.cq: Deque[int] = collections.deque(np.flatnonzero(crit).tolist())
-        self.nq: Deque[int] = collections.deque(np.flatnonzero(~crit).tolist())
-        self.rq: List[int] = []
+        # queue seeds, computed once — reset() rebuilds the deques from
+        # these instead of re-running flatnonzero every iteration
+        self._cq0 = np.flatnonzero(crit).tolist()
+        self._nq0 = np.flatnonzero(~crit).tolist()
+        self.cq: Deque[int] = collections.deque(self._cq0)
+        self.nq: Deque[int] = collections.deque(self._nq0)
         self.est = RateEstimator(sim)
         self.send_order: Dict[int, int] = {}
-        self.order_ctr = 0
         self.outstanding: Deque[Tuple[int, int]] = collections.deque()  # (order, seq)
         self.acked: Set[int] = set()
+        self.gen = 0
+        self.watchdog: Optional[int] = None
+        self.pacing_timer: Optional[int] = None
+        self.reset()
+
+    def reset(self, gen: Optional[int] = None) -> None:
+        """Restore cold-start state in place (flow pooling, DESIGN.md §9).
+
+        Pending timers are cancelled and the flow generation bumps so
+        stale deliveries/ACKs from the previous life are dropped.
+        """
+        if gen is not None:
+            self.gen = gen
+        self.cq.clear()
+        self.cq.extend(self._cq0)
+        self.nq.clear()
+        self.nq.extend(self._nq0)
+        self.rq: List[int] = []
+        self.est.reset()
+        self.send_order.clear()
+        self.order_ctr = 0
+        self.outstanding.clear()
+        self.acked.clear()
         self.highest_acked_order = -1
         self.stopped = False
         self.done = False
+        self.reg_acked = False
         self.startup = True
         self.full_bw = 0.0
         self.full_cnt = 0
         self.next_send_time = 0.0
         self.total_sent = 0
         self.start_time: Optional[float] = None
-        self.watchdog: Optional[int] = None
-        self.pacing_timer: Optional[int] = None
+        self._phase = 0
+        self._phase_start = 0.0
+        self._last_check = -1.0
+        if self.watchdog is not None:
+            self.sim.cancel(self.watchdog)
+        self.watchdog = None
+        if self.pacing_timer is not None:
+            self.sim.cancel(self.pacing_timer)
+        self.pacing_timer = None
 
     def start(self):
         self.start_time = self.sim.now
         self.reg_acked = False
-        self._send_reg()
+        self._send_reg(self.gen)
         self._pump()
         self._arm_watchdog()
 
-    def _send_reg(self):
+    def _send_reg(self, gen: Optional[int] = None):
         """Registration carries the flow metadata — critical, so it is
         retried until acknowledged (paper §III-E: critical = 100%)."""
+        if gen is not None and gen != self.gen:
+            return          # retry chain from a previous life of the flow
         if self.reg_acked or self.done:
             return
         reg = Packet(self.flow, -1, 64, kind="reg",
-                     meta={"n": self.n, "t": self.sim.now, "critical": self.critical})
+                     meta={"n": self.n, "t": self.sim.now, "g": self.gen,
+                           "critical": self.critical})
         self.pipe.send(reg, self.deliver)
         self.sim.after(max(3 * self.est.rtprop, 5e-3)
                        if math.isfinite(self.est.rtprop) else 20e-3,
-                       self._send_reg)
+                       partial(self._send_reg, self.gen))
 
     def _arm_watchdog(self):
         if self.watchdog is not None:
@@ -653,7 +764,7 @@ class LTPSender:
         self.total_sent += 1
         return Packet(self.flow, seq, self.payload, kind="data",
                       critical=bool(self.critical[seq]),
-                      meta={"t": self.sim.now, "order": order})
+                      meta={"t": self.sim.now, "order": order, "g": self.gen})
 
     def _pump(self):
         if self.done or self.stopped:
@@ -700,6 +811,9 @@ class LTPSender:
         if self.done:
             return
         if pkt.kind == "stop":
+            if isinstance(pkt.meta, dict) and \
+                    pkt.meta.get("g", self.gen) != self.gen:
+                return      # stop aimed at a previous life of this flow
             self.stopped = True
             self.done = True
             if self.watchdog is not None:
@@ -709,9 +823,14 @@ class LTPSender:
             return
         seq = pkt.seq
         if seq == -1:           # registration ack
+            if isinstance(pkt.meta, dict) and \
+                    pkt.meta.get("g", self.gen) != self.gen:
+                return
             self.reg_acked = True
             return
         echo = pkt.meta.get("echo") or {}
+        if echo.get("g", self.gen) != self.gen:
+            return          # ACK for a previous life of this pooled flow
         if "t" in echo:
             self.est.on_ack(self.payload, self.sim.now - echo["t"])
         self._startup_check()
@@ -772,11 +891,18 @@ class LTPSender:
         for pkt, _t in items:
             if pkt.kind == "stop":
                 self.on_ack(pkt)        # terminal: fires on_done
-                return
+                if self.done:
+                    return
+                continue                # stale stop: keep consuming
             if pkt.seq == -1:
+                if isinstance(pkt.meta, dict) and \
+                        pkt.meta.get("g", self.gen) != self.gen:
+                    continue
                 self.reg_acked = True
                 continue
             echo = pkt.meta.get("echo") or {}
+            if echo.get("g", self.gen) != self.gen:
+                continue    # ACK for a previous life of this pooled flow
             if "t" in echo:
                 rtts.append(self.sim.now - echo["t"])
             self.acked.add(pkt.seq)

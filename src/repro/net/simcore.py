@@ -26,13 +26,21 @@ decisions drawn as a single vectorized numpy pass over the same RNG
 stream the per-packet path would consume, and per-packet arrival times
 handed to the receiver in one callback. This is what makes paper-scale
 sweeps (64 workers x 4 PS) feasible in quick mode.
+
+Event engine (DESIGN.md §9): ``Sim`` defaults to a calendar queue — a
+near-future bucket wheel plus a far-future heap, batch-popping
+same-timestamp events FIFO by schedule id — with the reference binary
+heap selectable via ``Sim(engine="heap")``. Both engines execute the
+same schedule in the same order, bitwise.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
 import warnings
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -72,8 +80,30 @@ class Packet:
     meta: Any = None      # protocol payload (e.g. acked seq, send stamp)
 
 
+#: engine selected by ``Sim()`` when none is given explicitly. "calendar"
+#: is the fast bucketed engine (DESIGN.md §9); "heap" is the reference
+#: binary-heap engine, kept so determinism tests can A/B the two.
+DEFAULT_ENGINE = "calendar"
+
+
 class Sim:
     """Event loop. Callbacks run at monotonically nondecreasing times.
+
+    Two interchangeable engines produce the *same execution order* —
+    events always fire in ``(time, schedule-id)`` order, so same-seed
+    runs are bitwise-identical across engines (pinned by
+    tests/test_calendar_queue.py):
+
+    * ``"calendar"`` (default) — a calendar queue: a near-future wheel
+      of ``_NB`` time buckets (each a tiny heap) plus a far-future heap
+      for events beyond the wheel horizon. All events sharing the head
+      timestamp are batch-popped and executed FIFO by schedule id; the
+      bucket width recalibrates to the observed mean event spacing every
+      ``_CAL_EVERY`` pops. Bucket placement uses ONE monotone map
+      ``t -> int((t - origin) / width)`` per wheel epoch, so float
+      rounding can shift a boundary event between adjacent buckets but
+      can never invert time order.
+    * ``"heap"`` — the single binary heap.
 
     ``truncated`` flips to True when a ``run`` stops on ``max_events``
     with work still pending — a co-simulation cut off mid-scenario must
@@ -81,17 +111,62 @@ class Sim:
     ``RuntimeWarning`` fires too, so silent truncation is impossible).
     """
 
-    def __init__(self):
+    _NB = 1024           # near-future wheel buckets
+    _CAL_EVERY = 512     # pops between bucket-width recalibrations
+    _ADV_EVERY = 8192    # empty-bucket advances that force a recalibration
+
+    def __init__(self, engine: Optional[str] = None):
+        engine = DEFAULT_ENGINE if engine is None else engine
+        if engine not in ("calendar", "heap"):
+            raise ValueError(f"unknown Sim engine {engine!r}; "
+                             f"expected 'calendar' or 'heap'")
+        self.engine = engine
         self.now = 0.0
-        self._heap: List = []
+        self._heap: List = []     # heap-engine queue / calendar far heap
         self._ids = itertools.count()
         self.cancelled: set = set()
         self.n_events = 0
         self.truncated = False
+        if engine == "calendar":
+            self._wheel: Optional[List[List]] = \
+                [[] for _ in range(self._NB)]
+            self._near = 0        # events currently in the wheel
+            self._org = 0.0       # wheel origin (time of absolute slot 0)
+            self._k = 0           # buckets consumed since the last rebuild
+            self._width = 1e-6    # bucket width; recalibrated while running
+            self._inv = 1e6       # 1 / width (slot = int((t-org) * inv))
+            self._cal_n = 0       # pops since the last calibration
+            self._cal_t = 0.0     # sim time at the last calibration
+            self._adv_n = 0       # empty advances since the last calibration
+            self._active: Optional[List] = None  # bucket being executed
+        else:
+            self._wheel = None
 
+    # -- scheduling ---------------------------------------------------------
     def at(self, t: float, fn: Callable[[], None]) -> int:
         eid = next(self._ids)
-        heapq.heappush(self._heap, (max(t, self.now), eid, fn))
+        if t < self.now:
+            t = self.now
+        wheel = self._wheel
+        if wheel is None:
+            heapq.heappush(self._heap, (t, eid, fn))
+            return eid
+        # inlined _place (this is THE scheduling hot path)
+        a = int((t - self._org) * self._inv) - self._k
+        if a < 0:
+            a = 0
+        if a >= self._NB:
+            heapq.heappush(self._heap, (t, eid, fn))
+            return eid
+        i = self._k % self._NB + a
+        if i >= self._NB:
+            i -= self._NB
+        b = wheel[i]
+        if b is self._active:
+            bisect.insort(b, (t, eid, fn))
+        else:
+            b.append((t, eid, fn))
+        self._near += 1
         return eid
 
     def after(self, dt: float, fn: Callable[[], None]) -> int:
@@ -99,6 +174,73 @@ class Sim:
 
     def cancel(self, eid: int) -> None:
         self.cancelled.add(eid)
+
+    def pending(self) -> int:
+        """Events still queued (any engine)."""
+        near = self._near if self._wheel is not None else 0
+        return near + len(self._heap)
+
+    # -- calendar internals -------------------------------------------------
+    def _place(self, t: float, eid: int, fn, clamp: bool = False) -> None:
+        # relative slot via the epoch's single monotone map: float
+        # rounding at a bucket boundary cannot reorder two events
+        a = int((t - self._org) * self._inv) - self._k
+        if a < 0:
+            a = 0          # belongs before the window: run ASAP, in order
+        if a >= self._NB:
+            if not clamp:  # beyond the horizon: park in the far heap
+                heapq.heappush(self._heap, (t, eid, fn))
+                return
+            a = self._NB - 1   # far-drain boundary rounding: last bucket
+        i = self._k % self._NB + a
+        if i >= self._NB:
+            i -= self._NB
+        b = self._wheel[i]
+        if b is self._active:
+            # insertion into the bucket being executed: insort keeps it
+            # ordered, and the new event can only land in the unexecuted
+            # suffix (it compares greater than everything already run)
+            bisect.insort(b, (t, eid, fn))
+        else:
+            b.append((t, eid, fn))   # future bucket: sorted on activation
+        self._near += 1
+
+    def _drain_far(self) -> None:
+        """Move far-heap events that now fall inside the wheel horizon."""
+        far = self._heap
+        end = self._org + (self._k + self._NB) * self._width
+        while far and far[0][0] < end:
+            t, eid, fn = heapq.heappop(far)
+            self._place(t, eid, fn, clamp=True)
+
+    def _rebuild(self, width: float) -> None:
+        """Re-anchor the wheel at ``now`` with a new bucket width."""
+        moved = [e for b in self._wheel for e in b]
+        for b in self._wheel:
+            b.clear()
+        self._near = 0
+        self._width = width
+        self._inv = 1.0 / width
+        self._org = self.now
+        self._k = 0
+        for t, eid, fn in moved:
+            self._place(t, eid, fn)
+        self._drain_far()
+
+    def _recalibrate(self) -> None:
+        span = self.now - self._cal_t
+        if span > 0.0 and self._cal_n > 0:
+            # ~8 events per bucket: wide enough that the horizon clears
+            # the pending set (no far-heap churn) and the loop is not
+            # dominated by empty-bucket advances, narrow enough that
+            # per-bucket sorts stay small
+            width = 8.0 * span / self._cal_n
+            width = min(max(width, 1e-9), 0.1)
+            if not (0.25 * self._width <= width <= 4.0 * self._width):
+                self._rebuild(width)
+        self._cal_n = 0
+        self._adv_n = 0
+        self._cal_t = self.now
 
     def every(self, dt: float, fn: Callable[[], None],
               until: float = float("inf")) -> Callable[[], None]:
@@ -123,6 +265,22 @@ class Sim:
         return cancel_hook
 
     def run(self, until: float = float("inf"), max_events: int = 100_000_000):
+        if self._wheel is None:
+            n = self._run_heap(until, max_events)
+        else:
+            n = self._run_calendar(until, max_events)
+        if n >= max_events and self.pending():
+            self.truncated = True
+            warnings.warn(
+                f"Sim.run stopped on max_events={max_events} with "
+                f"{self.pending()} events pending at t={self.now:.6f}s — "
+                f"results are truncated, not converged",
+                RuntimeWarning, stacklevel=2)
+        self.n_events += n
+        PERF.events += n
+        return n
+
+    def _run_heap(self, until: float, max_events: int) -> int:
         n = 0
         while self._heap and n < max_events:
             t, eid, fn = heapq.heappop(self._heap)
@@ -135,15 +293,69 @@ class Sim:
             self.now = t
             fn()
             n += 1
-        if n >= max_events and self._heap:
-            self.truncated = True
-            warnings.warn(
-                f"Sim.run stopped on max_events={max_events} with "
-                f"{len(self._heap)} events pending at t={self.now:.6f}s — "
-                f"results are truncated, not converged",
-                RuntimeWarning, stacklevel=2)
-        self.n_events += n
-        PERF.events += n
+        return n
+
+    def _run_calendar(self, until: float, max_events: int) -> int:
+        n = 0
+        wheel, nb = self._wheel, self._NB
+        far = self._heap
+        cancelled = self.cancelled
+        while n < max_events:
+            if not self._near:
+                # discard cancelled ghosts at the far frontier first —
+                # the heap engine drops a cancelled head even when it
+                # lies beyond ``until``, and pending() must agree
+                while far and far[0][1] in cancelled:
+                    cancelled.discard(heapq.heappop(far)[1])
+                if not far or far[0][0] > until:
+                    break
+                # the wheel is empty: jump its window to the far frontier
+                self._org = far[0][0]
+                self._k = 0
+                self._drain_far()
+                continue
+            bucket = wheel[self._k % nb]
+            if not bucket:
+                self._k += 1
+                if far and far[0][0] < \
+                        self._org + (self._k + nb) * self._width:
+                    self._drain_far()
+                self._adv_n += 1
+                if self._adv_n >= self._ADV_EVERY:
+                    # sparse wheel: the width is far too small for the
+                    # current event spacing — widen before scanning on
+                    self._recalibrate()
+                continue
+            # batch-pop: sort the whole bucket once (same-timestamp runs
+            # come out FIFO by schedule id) and execute it in place;
+            # events landing in this bucket mid-execution insort into the
+            # unexecuted suffix
+            bucket.sort()
+            self._active = bucket
+            pos = 0
+            stop = False
+            while pos < len(bucket):
+                t, eid, fn = bucket[pos]
+                if eid in cancelled:    # drop ghosts even beyond until
+                    cancelled.discard(eid)
+                    pos += 1
+                    continue
+                if t > until or n >= max_events:
+                    stop = True   # bucket head is the global pending min
+                    break
+                pos += 1
+                self.now = t
+                fn()
+                n += 1
+            self._active = None
+            self._near -= pos
+            self._cal_n += pos
+            if stop:
+                del bucket[:pos]   # keep the sorted unexecuted suffix
+                break
+            bucket.clear()
+            if self._cal_n >= self._CAL_EVERY:
+                self._recalibrate()
         return n
 
 
@@ -177,6 +389,11 @@ class Pipe:
         backlog = max(0.0, self.busy_until - self.sim.now)
         return backlog * self.rate / 8.0 / 1500.0
 
+    def recycle(self) -> None:
+        """Drop residual serializer backlog (pooled per-flow back
+        channels between iterations; cumulative counters are kept)."""
+        self.busy_until = 0.0
+
     def send(self, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
         """Returns False if droptail-dropped at enqueue."""
         if self.queue_len() >= self.cap:
@@ -192,11 +409,9 @@ class Pipe:
         arrive = self.busy_until + self.delay
         self.bytes_delivered += pkt.size
         PERF.packets += 1
-
-        def _deliver(p=pkt):
-            deliver(p)
-
-        self.sim.at(arrive, _deliver)
+        # partial() beats a def-closure here: this is the per-packet hot
+        # path and partial allocates no code/cell objects
+        self.sim.at(arrive, partial(deliver, pkt))
         return True
 
     def send_train(self, pkts: Sequence[Packet],
@@ -279,7 +494,7 @@ class Pipe:
                 return n_acc
         self.bytes_delivered += sum(p.size for p, _ in items)
         PERF.packets += len(items)
-        self.sim.at(items[-1][1], lambda: deliver_train(items))
+        self.sim.at(items[-1][1], partial(deliver_train, items))
         return n_acc
 
 

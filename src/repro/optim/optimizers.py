@@ -7,6 +7,7 @@ the same sharding as params (elementwise ops — GSPMD propagates).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Tuple
 
 import jax
@@ -22,6 +23,7 @@ class Optimizer:
     # update(grads, state, params, lr) -> (updates, new_state)
 
 
+@functools.lru_cache(maxsize=None)
 def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
                  nesterov: bool = False) -> Optimizer:
     def init(params):
@@ -46,6 +48,7 @@ def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
     return Optimizer(init, update)
 
 
+@functools.lru_cache(maxsize=None)
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     def init(params):
@@ -82,6 +85,10 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
 
 def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    """Equal knobs -> the SAME (memoized) Optimizer instance. Optimizers
+    are stateless function pairs, so sharing is free — and it makes the
+    identity-keyed jit caches in ``runtime.step`` hit across trainers
+    built from equivalent configs (DESIGN.md §9)."""
     if cfg.optimizer == "adamw":
         return adamw(weight_decay=cfg.weight_decay)
     return sgd_momentum(momentum=cfg.momentum, weight_decay=cfg.weight_decay)

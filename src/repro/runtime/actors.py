@@ -95,9 +95,12 @@ class PSActor:
         rt.tel.record("grad_arrived", rt.sim.now, worker=g.worker,
                       iteration=g.iteration, staleness=g.staleness,
                       delivered=float(g.payload["frac"]))
+        # O(1) sample: PS pending depth only. Trunk queue depths are
+        # sampled on the runtime's Sim.every wall grid, NOT per arrival —
+        # a topology walk per gradient would put an O(pipes) cost on the
+        # hot path (DESIGN.md §9).
         rt.policy.on_arrival(g)
-        rt.tel.record("queue", rt.sim.now, depth=rt.policy.pending_count(),
-                      **rt.net_queue_sample())
+        rt.tel.record("queue", rt.sim.now, depth=rt.policy.pending_count())
         self.flush()
 
     def flush(self) -> None:

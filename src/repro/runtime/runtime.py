@@ -26,6 +26,7 @@ runtime raises instead of returning a partial history.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, List, Optional
 
 import jax
@@ -89,7 +90,7 @@ class ClusterRuntime:
         seed: int = 0,
         transport: str = "analytic",
         spec: Optional[GatherSpec] = None,
-        coalesce: int = 1,
+        coalesce: Optional[int] = None,
         telemetry: bool = True,
         params=None,
         opt_state=None,
@@ -179,6 +180,7 @@ class ClusterRuntime:
         self.history: List[Dict] = []
         self._stopped = False
         self._batches: List = []
+        self._shaped_cache: Dict[int, object] = {}
         self.steps = 0
         self._eval_fn = None
         self._eval_every = 0
@@ -213,12 +215,21 @@ class ClusterRuntime:
         return jax.tree.map(lambda x: x[worker], self._shaped_batch(it))
 
     def _shaped_batch(self, it: int):
-        b = self._batches[it]
-        return jax.tree.map(
-            lambda x: jnp.asarray(x).reshape(
-                (self.w, x.shape[0] // self.w) + x.shape[1:]),
-            b,
-        )
+        shaped = self._shaped_cache.get(it)
+        if shaped is None:
+            b = self._batches[it]
+            shaped = jax.tree.map(
+                lambda x: jnp.asarray(x).reshape(
+                    (self.w, x.shape[0] // self.w) + x.shape[1:]),
+                b,
+            )
+            self._shaped_cache[it] = shaped
+            # small LRU: live iterations span at most the staleness
+            # window; without a bound a long run would pin one device
+            # copy of every batch it ever consumed
+            while len(self._shaped_cache) > 8:
+                self._shaped_cache.pop(next(iter(self._shaped_cache)))
+        return shaped
 
     def on_grad_ready(self, actor: WorkerActor, it: int) -> None:
         if isinstance(self.policy, BSPPolicy):
@@ -238,6 +249,12 @@ class ClusterRuntime:
                              loss=loss, flat=flat):
                 stream = np.concatenate(list(masks_ps))
                 row = stp.tile_mask_onto_plan(self.plan, stream)
+                if self.tel.enabled:
+                    self.tel.record(
+                        "masks", self.sim.now, worker=worker, iteration=it,
+                        digest=hashlib.blake2b(
+                            np.ascontiguousarray(masks_ps).tobytes(),
+                            digest_size=8).hexdigest())
                 if early:
                     self.tel.record("early_close", self.sim.now,
                                     worker=worker, iteration=it,
@@ -275,11 +292,6 @@ class ClusterRuntime:
     def on_worker_finished(self, idx: int) -> None:
         self._n_finished += 1
         self.maybe_finish()
-
-    def net_queue_sample(self) -> Dict[str, float]:
-        if self.net_des is not None:
-            return {"net_depth": self.net_des.queue_depth_pkts()}
-        return {}
 
     # ------------------------------------------------------------------
     # bsp barrier path (legacy-parity)
@@ -347,6 +359,12 @@ class ClusterRuntime:
         """All DES shards closed: real delivery masks -> fused step."""
         rnd = self._bsp_round
         per_shard = sharded.delivery_masks()        # (n_ps, W, n)
+        if self.tel.enabled:
+            self.tel.record(
+                "masks", self.sim.now, iteration=rnd.iteration,
+                digest=hashlib.blake2b(
+                    np.ascontiguousarray(per_shard).tobytes(),
+                    digest_size=8).hexdigest())
         masks = np.stack([
             stp.tile_mask_onto_plan(
                 self.plan, np.concatenate([per_shard[p][f]
@@ -385,11 +403,15 @@ class ClusterRuntime:
             self.max_applied_iter = it
             self._visible = (self.version, self.params)
             self.sim_time = self.sim.now
+            # loss/realized stay as LAZY jax scalars: forcing them here
+            # would block the event loop on the XLA step instead of
+            # letting it run concurrently (DESIGN.md §9); ``run``
+            # converts the whole history once the sim drains.
             rec = {
                 "step": it,
-                "loss": float(loss),
+                "loss": loss,
                 "bst": bst,
-                "delivered": float(realized),
+                "delivered": realized,
                 "sim_time": self.sim_time,
             }
             self.tel.record("apply", self.sim.now, step=it, n_grads=self.w,
@@ -402,8 +424,9 @@ class ClusterRuntime:
                 rec["eval"] = float(self._eval_fn(self.params))
             self.history.append(rec)
             if self._log_every and it % self._log_every == 0:
-                msg = f"step {it:5d} loss {rec['loss']:.4f} " \
-                      f"bst {bst*1e3:6.1f}ms delivered {rec['delivered']:.3f}"
+                msg = f"step {it:5d} loss {float(rec['loss']):.4f} " \
+                      f"bst {bst*1e3:6.1f}ms " \
+                      f"delivered {float(rec['delivered']):.3f}"
                 if "eval" in rec:
                     msg += f" eval {rec['eval']:.4f}"
                 print(msg, flush=True)
@@ -459,7 +482,9 @@ class ClusterRuntime:
         self.version += 1
         self.max_applied_iter = max(self.max_applied_iter, top_it)
         stale = [g.staleness for g in batch]
-        loss = float(np.mean([float(g.payload["loss"]) for g in batch]))
+        # lazy mean loss — forcing here would serialize the event loop
+        # behind every XLA apply (see _bsp_commit / run finalization)
+        loss = jnp.mean(jnp.stack([g.payload["loss"] for g in batch]))
         self.sim_time = self.sim.now
         rec = {
             "step": self.version - 1,
@@ -477,7 +502,7 @@ class ClusterRuntime:
             rec["eval"] = float(self._eval_fn(self.params))
         self.history.append(rec)
         if self._log_every and (self.version - 1) % self._log_every == 0:
-            print(f"apply {self.version - 1:5d} loss {loss:.4f} "
+            print(f"apply {self.version - 1:5d} loss {float(loss):.4f} "
                   f"staleness {max(stale)} n_grads {len(batch)}", flush=True)
         self.policy.on_applied(batch)
         self._publish(self.version, self.params)
@@ -533,7 +558,22 @@ class ClusterRuntime:
             self.net_des.stop()
         if self._sampler_cancel is not None:
             self._sampler_cancel()
+        self._finalize_history()
         return self.history
+
+    def _finalize_history(self) -> None:
+        """Force the lazy jax scalars the commit paths deferred (loss /
+        realized fraction) into plain floats, AFTER the event loop has
+        drained — one sync at the end instead of one per iteration."""
+        for rec in self.history:
+            for k in ("loss", "delivered"):
+                v = rec.get(k)
+                if v is not None and not isinstance(v, (int, float)):
+                    rec[k] = float(v)
+        for e in self.tel.events:
+            v = e.get("loss")
+            if v is not None and not isinstance(v, (int, float)):
+                e["loss"] = float(v)
 
     # throughput in items/sec of simulated wall-clock
     def throughput(self, items_per_step: int) -> float:

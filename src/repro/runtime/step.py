@@ -13,8 +13,19 @@ version that worker actually fetched, so the fused vmap (which assumes
 one shared params tree) cannot be used. The apply function always takes
 a fixed-shape (W, n_packets, payload) buffer — shorter batches are
 zero-weight padded — so it compiles exactly once per runtime.
+
+Every ``build_*`` factory memoizes through a module-level jit cache
+(DESIGN.md §9) keyed on (api, opt, ltp, plan geometry, W, protocol):
+constructing a second ``ClusterRuntime``/``PSTrainer`` over the same
+model and config reuses the already-compiled step instead of paying
+XLA compilation again — that compile used to dominate the runtime DES
+benchmark's wall clock. Cached entries pin their api/opt objects (the
+key uses object identity), and the cache is LRU-bounded.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +35,30 @@ from repro.config import LTPConfig
 from repro.core import ltp_sync as ls
 from repro.core import packets as pk
 from repro.optim import Optimizer
+
+_JIT_CACHE: "OrderedDict[tuple, Tuple[Callable, tuple]]" = OrderedDict()
+_JIT_CACHE_MAX = 32
+
+
+def _plan_key(plan) -> tuple:
+    """Structural identity of a PacketPlan (its arrays are unhashable)."""
+    return (plan.packet_floats, plan.n_packets, plan.leaf_shapes,
+            plan.leaf_offsets, plan.critical.tobytes())
+
+
+def _cached(key: tuple, pins: tuple, build: Callable) -> Callable:
+    """Return the memoized build() result for ``key``. ``pins`` holds
+    strong references to the identity-keyed objects (api/opt) so their
+    ids cannot be recycled while the entry lives."""
+    hit = _JIT_CACHE.get(key)
+    if hit is not None:
+        _JIT_CACHE.move_to_end(key)
+        return hit[0]
+    fn = build()
+    _JIT_CACHE[key] = (fn, pins)
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+    return fn
 
 
 def build_fused_step(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
@@ -35,6 +70,13 @@ def build_fused_step(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
       step(params, opt_state, residual, batch, masks, frac, lr)
         -> (params, opt_state, residual, mean_loss, realized_frac)
     """
+    key = ("fused", id(api), id(opt), ltp, _plan_key(plan), w, protocol)
+    return _cached(key, (api, opt), lambda: _build_fused_step(
+        api, opt, ltp, plan, w, protocol))
+
+
+def _build_fused_step(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
+                      protocol: str):
     use_ltp = protocol == "ltp"
 
     def per_worker_grads(params, batch):
@@ -83,28 +125,35 @@ def build_worker_grad_fn(api, plan):
     """One worker's gradient against ITS OWN params snapshot (the
     async/SSP compute leg): (params, batch_slice) -> (loss, flat packets
     of shape (n_packets, packet_floats))."""
+    key = ("grad", id(api), _plan_key(plan))
 
-    @jax.jit
-    def grad_fn(params, batch):
-        loss, grads = jax.value_and_grad(
-            lambda p: api.loss_fn(p, batch))(params)
-        return loss, pk.flatten(plan, grads)
+    def build():
+        @jax.jit
+        def grad_fn(params, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(p, batch))(params)
+            return loss, pk.flatten(plan, grads)
 
-    return grad_fn
+        return grad_fn
+
+    return _cached(key, (api,), build)
 
 
 def build_ef_gate_fn(ltp: LTPConfig):
     """Error-feedback gate for the per-gradient path: accumulate what the
     network dropped, re-add it next round (EF-SGD, DESIGN.md §2)."""
 
-    @jax.jit
-    def gate(flat, residual, mask):
-        flat = flat + residual
-        sent = ls.apply_delivery(flat, mask, backend=ltp.sync_backend,
-                                 interpret=ltp.kernel_interpret)
-        return sent, flat - sent
+    def build():
+        @jax.jit
+        def gate(flat, residual, mask):
+            flat = flat + residual
+            sent = ls.apply_delivery(flat, mask, backend=ltp.sync_backend,
+                                     interpret=ltp.kernel_interpret)
+            return sent, flat - sent
 
-    return gate
+        return gate
+
+    return _cached(("ef", ltp), (), build)
 
 
 def build_apply_fn(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
@@ -122,19 +171,24 @@ def build_apply_fn(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
     Note: under "count" compensation the per-packet deliverer count is
     taken within the admitted batch.
     """
+    key = ("apply", id(api), id(opt), ltp, _plan_key(plan), w, premasked)
 
-    @jax.jit
-    def apply(params, opt_state, stacked, masks, weights, frac, lr):
-        mean_flat = ls.reduce_packet_stream(
-            stacked, masks, ltp, w, expected_frac=frac,
-            worker_weights=weights, premasked=premasked)
-        dtypes = [x.dtype for x in jax.tree_util.tree_leaves(params)]
-        mean_grads = pk.unflatten(plan, mean_flat, dtypes)
-        updates, opt_state = opt.update(mean_grads, opt_state, params, lr)
-        params = jax.tree.map(lambda p, u: p + u, params, updates)
-        return params, opt_state
+    def build():
+        @jax.jit
+        def apply(params, opt_state, stacked, masks, weights, frac, lr):
+            mean_flat = ls.reduce_packet_stream(
+                stacked, masks, ltp, w, expected_frac=frac,
+                worker_weights=weights, premasked=premasked)
+            dtypes = [x.dtype for x in jax.tree_util.tree_leaves(params)]
+            mean_grads = pk.unflatten(plan, mean_flat, dtypes)
+            updates, opt_state = opt.update(mean_grads, opt_state, params,
+                                            lr)
+            params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return params, opt_state
 
-    return apply
+        return apply
+
+    return _cached(key, (api, opt), build)
 
 
 def draw_delivery_masks(plan, w: int, rng: np.random.Generator,

@@ -16,6 +16,11 @@ plus per-kind payload:
   stale_drop      worker, iteration, staleness (SSP rejected the grad)
   block/unblock   worker, iteration            (SSP/BSP gating)
   queue           depth [, net_depth]          (PS pending / trunk pkts)
+  masks           [worker,] iteration, digest  (DES delivery-mask hash)
+
+Sampling discipline (DESIGN.md §9): per-event hooks record O(1)
+payloads only; anything that walks topology state (trunk queue depths)
+is sampled on the runtime's ``Sim.every`` wall grid, never per event.
 """
 from __future__ import annotations
 
@@ -30,8 +35,9 @@ class Telemetry:
         self.events: List[dict] = []
 
     def record(self, kind: str, t: float, **fields) -> None:
-        if self.enabled:
-            self.events.append({"kind": kind, "t": float(t), **fields})
+        if not self.enabled:
+            return
+        self.events.append({"kind": kind, "t": float(t), **fields})
 
     def of(self, kind: str) -> List[dict]:
         return [e for e in self.events if e["kind"] == kind]

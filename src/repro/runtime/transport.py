@@ -21,6 +21,12 @@ runtime's shared ``Sim`` clock:
     iteration, bsp runs one ``ShardedGatherReceiver`` barrier gather;
     async/SSP run one single-flow ``PSGatherReceiver`` per (worker,
     shard) so every flow closes independently.
+
+    Flow graphs are POOLED (DESIGN.md §9): senders, receivers, and the
+    per-flow ack back-channel pipes are built once and recycled across
+    iterations through the ``reset(gen)`` protocol — the per-round flow
+    generation fences stale in-flight traffic out of the next round —
+    and packet trains (``coalesce``) are on by default.
 """
 from __future__ import annotations
 
@@ -102,33 +108,54 @@ class AnalyticPerWorkerNet:
         self.sim.after(t_close, done)
 
 
-class _DESFlowSet:
-    """Per-(worker, iteration) flow bundle on the shared topology: one
-    single-flow gather receiver per PS shard; fires ``cb`` once all
-    shards have closed."""
+def _send_stop_pkt(tr: "DESTransport", back: Pipe, s) -> None:
+    """Early-Close "stop" on the ack back-channel. Under coalescing the
+    stop rides the same train machinery as data ACKs (one-packet train),
+    matching ``_DESFlowSet``'s ack path; per-packet otherwise. The stop
+    carries the sender's current flow generation so a stop for a
+    finished iteration cannot kill the pooled sender's next life."""
+    stop = Packet(s.flow, -2, 41, kind="stop", meta={"g": s.gen})
+    if tr.coalesce > 1:
+        back.send_train([stop], s.on_ack_train)
+    else:
+        back.send(stop, s.on_ack)
 
-    def __init__(self, tr: "DESTransport", worker: int,
-                 cb: Callable[[np.ndarray, float, bool], None]):
+
+class _DESFlowSet:
+    """Per-worker flow bundle on the shared topology: one single-flow
+    gather receiver per PS shard; fires ``cb`` once all shards have
+    closed.
+
+    Pooled (DESIGN.md §9): the runtime creates ONE flow set per worker
+    and recycles it every iteration through ``begin`` — the back-channel
+    pipes, senders, receivers, and their wiring closures are built once;
+    each iteration only resets their state (a new flow generation drops
+    stragglers from the previous round).
+    """
+
+    def __init__(self, tr: "DESTransport", worker: int):
         self.tr = tr
         self.worker = worker
-        self.cb = cb
+        self.gen = 0
+        self.idle = True    # free for reuse (its last round fully closed)
+        self.cb: Optional[Callable[[np.ndarray, float, bool], None]] = None
         self.masks: List[Optional[np.ndarray]] = [None] * tr.n_ps
         self.closed = 0
         self.early = False
+        self.backs: List[Pipe] = []
+        self.senders: List = []
+        self.recvs: List = []
+        self._ones = np.ones(tr.n, bool)
         for p in range(tr.n_ps):
-            self._one_flow(p)
+            self._build_flow(p)
 
-    def _one_flow(self, p: int) -> None:
+    def _build_flow(self, p: int) -> None:
         tr, w = self.tr, self.worker
         back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate, 10_000,
                     tr.rng)
         if tr.protocol == "ltp":
-            sender_cell: list = [None]
-
-            def send_stop(flow):
-                s = sender_cell[0]
-                if s is not None:
-                    back.send(Packet(s.flow, -2, 41, kind="stop"), s.on_ack)
+            def send_stop(flow, p=p, back=back):
+                _send_stop_pkt(tr, back, self.senders[p])
 
             def on_close(recv, p=p):
                 full = recv.all_full
@@ -137,10 +164,15 @@ class _DESFlowSet:
             recv = PSGatherReceiver(
                 tr.sim, [w], tr.lt_per_worker[w], tr.deadline_per_worker[w],
                 tr.ltp.data_pct_threshold, send_stop, on_close=on_close)
+            # orphan recovery: data from an older generation means that
+            # life of the sender never got its stop (lost in flight) —
+            # re-stop it, but only while it still lives that generation
+            # (a reset sender must not be killed by its past round)
+            recv.on_stale = (lambda flow, g, p=p, back=back:
+                             self._stop_stale(p, g, back))
             s = snd.LTPSender(tr.sim, _fwd_path(tr.topo, tr.spec, p, w),
                               recv.on_data, tr.n, critical=tr.crit, flow=w,
                               rng=tr.rng, train_len=tr.coalesce)
-            sender_cell[0] = s
             recv.attach_ack(w, lambda pkt, s=s, back=back:
                             back.send(pkt, s.on_ack))
             if tr.coalesce > 1:
@@ -148,24 +180,47 @@ class _DESFlowSet:
                 recv.attach_ack_train(
                     w, lambda acks, s=s, back=back:
                     back.send_train(acks, s.on_ack_train))
-            s.start()
         else:
             def on_done(s, p=p):
-                self._shard_done(p, np.ones(tr.n, bool), False)
+                self._shard_done(p, self._ones, False)
 
             s = snd.make_sender(tr.protocol, tr.sim,
                                 _fwd_path(tr.topo, tr.spec, p, w), None,
                                 tr.n, flow=w, rng=tr.rng, on_done=on_done,
                                 train_len=tr.coalesce)
-            r = snd.TcpReceiver(tr.sim, lambda pkt, s=s, back=back:
-                                back.send(pkt, s.on_ack), w)
-            s.deliver = r.on_data
+            recv = snd.TcpReceiver(tr.sim, lambda pkt, s=s, back=back:
+                                   back.send(pkt, s.on_ack), w)
+            s.deliver = recv.on_data
             if tr.coalesce > 1:
-                s.deliver_train = r.on_data_train
-                r.send_ack_train = (lambda acks, s=s, back=back:
-                                    back.send_train(acks, s.on_ack_train))
-            r.n_total = tr.n
-            s.start()
+                s.deliver_train = recv.on_data_train
+                recv.send_ack_train = (lambda acks, s=s, back=back:
+                                       back.send_train(acks, s.on_ack_train))
+            recv.n_total = tr.n
+        self.backs.append(back)
+        self.senders.append(s)
+        self.recvs.append(recv)
+
+    def _stop_stale(self, p: int, g, back: Pipe) -> None:
+        s = self.senders[p]
+        if g is not None and s.gen == g and not s.done:
+            _send_stop_pkt(self.tr, back, s)
+
+    def begin(self, cb: Callable[[np.ndarray, float, bool], None]) -> None:
+        """Start (or restart) this worker's shard flows for one round."""
+        self.gen += 1
+        self.idle = False
+        self.cb = cb
+        self.masks = [None] * self.tr.n_ps
+        self.closed = 0
+        self.early = False
+        for p in range(self.tr.n_ps):
+            self.backs[p].recycle()
+            if self.tr.protocol == "ltp":
+                self.recvs[p].reset(gen=self.gen)
+            else:
+                self.recvs[p].reset(gen=self.gen, n_total=self.tr.n)
+            self.senders[p].reset(gen=self.gen)
+            self.senders[p].start()
 
     def _shard_done(self, p: int, mask: np.ndarray, early: bool) -> None:
         if self.masks[p] is not None:
@@ -176,34 +231,60 @@ class _DESFlowSet:
         if self.closed >= self.tr.n_ps:
             stacked = np.stack(self.masks)          # (n_ps, n)
             frac = float(stacked.mean())
+            self.idle = True    # every shard closed: free for reuse
             self.cb(stacked, frac, self.early)
 
 
 class _DESBarrierGather:
     """Per-iteration bsp gather on the shared topology: one
     ``ShardedGatherReceiver`` over all W workers; senders join as their
-    compute finishes (the runtime's start_delays, made event-driven)."""
+    compute finishes (the runtime's start_delays, made event-driven).
 
-    def __init__(self, tr: "DESTransport",
-                 cb: Callable[[ShardedGatherReceiver], None]):
+    Pooled (DESIGN.md §9): built once per transport; each iteration
+    calls ``begin`` to reset the sharded receiver and bump the flow
+    generation, and ``add_worker`` resets+restarts that worker's pooled
+    senders instead of constructing new ones.
+    """
+
+    def __init__(self, tr: "DESTransport"):
         self.tr = tr
-        self.cb = cb
+        self.gen = 0
+        self.cb: Optional[Callable[[ShardedGatherReceiver], None]] = None
         self.t0 = tr.sim.now
         self._senders: Dict = {}
-        self._stops: Dict = {}
+        self._backs: Dict = {}
 
         def send_stop(p, f):
-            stop = self._stops.get((p, f))
-            if stop is not None:
-                stop()
+            s = self._senders.get((p, f))
+            if s is not None:
+                _send_stop_pkt(tr, self._backs[(p, f)], s)
 
         self.sharded = ShardedGatherReceiver(
             tr.sim, tr.n_ps, list(range(tr.w)),
             [tr.lt_shard] * tr.n_ps, [tr.deadline_shard] * tr.n_ps,
             tr.ltp.data_pct_threshold, send_stop)
         self._n_closed = 0
-        for s in self.sharded.shards:
-            s.on_close = self._shard_closed
+        for p, shard in enumerate(self.sharded.shards):
+            shard.on_close = self._shard_closed
+            # orphan recovery: a sender whose stop was lost and whose
+            # shard closed before its next add_worker reset would pump
+            # retransmissions forever — re-stop it while it still lives
+            # the stale generation (see _DESFlowSet._stop_stale)
+            shard.on_stale = (lambda flow, g, p=p:
+                              self._stop_stale(p, flow, g))
+
+    def begin(self, cb: Callable[[ShardedGatherReceiver], None]) -> None:
+        """Arm the barrier for a fresh iteration."""
+        self.gen += 1
+        self.cb = cb
+        self.t0 = self.tr.sim.now
+        self._n_closed = 0
+        self.sharded.reset(gen=self.gen)
+
+    def _stop_stale(self, p: int, flow: int, g) -> None:
+        s = self._senders.get((p, flow))
+        if s is not None and g is not None and s.gen == g and not s.done:
+            _send_stop_pkt(self.tr, self._backs[(p, flow)], s)
 
     def _shard_closed(self, shard: PSGatherReceiver) -> None:
         self.tr.on_early_close(shard.ps_id, self.tr.sim.now,
@@ -219,23 +300,37 @@ class _DESBarrierGather:
             shard = self.sharded.shard(p)
             if shard.closed:
                 continue   # shard already gave up on this straggler
-            back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate,
-                        10_000, tr.rng)
-            s = snd.LTPSender(tr.sim, _fwd_path(tr.topo, tr.spec, p, worker),
-                              shard.on_data, tr.n, critical=tr.crit,
-                              flow=worker, rng=tr.rng, train_len=tr.coalesce)
+            key = (p, worker)
+            s = self._senders.get(key)
+            if s is None:
+                back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate,
+                            10_000, tr.rng)
+                s = snd.LTPSender(
+                    tr.sim, _fwd_path(tr.topo, tr.spec, p, worker),
+                    shard.on_data, tr.n, critical=tr.crit,
+                    flow=worker, rng=tr.rng, train_len=tr.coalesce)
+                if tr.coalesce > 1:
+                    s.deliver_train = shard.on_data_train
+                self._backs[key] = back
+                self._senders[key] = s
+                s.gen = self.gen    # align with this round's receivers
+            else:
+                back = self._backs[key]
+                back.recycle()
+                s.reset(gen=self.gen)
             shard.attach_ack(worker, lambda pkt, s=s, back=back:
                              back.send(pkt, s.on_ack))
             if tr.coalesce > 1:
-                s.deliver_train = shard.on_data_train
                 shard.attach_ack_train(
                     worker, lambda acks, s=s, back=back:
                     back.send_train(acks, s.on_ack_train))
-            self._stops[(p, worker)] = (
-                lambda s=s, back=back: back.send(
-                    Packet(s.flow, -2, 41, kind="stop"), s.on_ack))
-            self._senders[(p, worker)] = s
             s.start()
+
+
+#: default train length for the runtime's packet-level co-simulation:
+#: the netsim grid's measured sweet spot (BENCH_netsim.json). Pass
+#: ``coalesce=1`` for the per-packet reference path.
+DEFAULT_COALESCE = 32
 
 
 class DESTransport:
@@ -244,12 +339,16 @@ class DESTransport:
     async/SSP use ``send`` (independent per-worker flow sets). LTP flows
     in this transport carry static LT thresholds from the paper's init
     formula (per-link attainable share); the epoch-adaptive LT update of
-    ``scenarios._iterate_gather`` is out of scope here."""
+    ``scenarios._iterate_gather`` is out of scope here.
+
+    ``coalesce`` defaults to ``DEFAULT_COALESCE`` packet trains
+    (DESIGN.md §7/§9) — the per-packet path is opt-in via
+    ``coalesce=1``, not the default the runtime silently pays for."""
 
     def __init__(self, sim: Sim, net: NetConfig, ltp: LTPConfig,
                  protocol: str, n_workers: int, model_bytes: float,
                  n_ps: int = 1, spec: Optional[GatherSpec] = None,
-                 seed: int = 0, coalesce: int = 1,
+                 seed: int = 0, coalesce: Optional[int] = None,
                  on_early_close: Optional[Callable] = None):
         self.sim = sim
         self.net = net
@@ -258,14 +357,20 @@ class DESTransport:
         self.w = n_workers
         self.spec = spec or GatherSpec(n_ps=n_ps)
         self.n_ps = self.spec.n_ps
-        self.coalesce = max(1, int(coalesce))
         self.rng = np.random.default_rng(seed + 101)
         self.bw = net.bandwidth_gbps * 1e9
         self.half_rtt = net.rtprop_ms * 1e-3
-        self.topo, self.sources = _build_topology(
-            sim, net, n_workers, self.spec, self.rng, self.coalesce)
         shard_bytes = model_bytes / self.n_ps
         self.n = _npkts(shard_bytes, protocol)
+        if coalesce is None:
+            # auto: coalesced by default, but never trains so long that
+            # the Early Close rule loses granularity on short flows
+            # (~8 close checks per shard flow minimum)
+            self.coalesce = min(DEFAULT_COALESCE, max(1, self.n // 8))
+        else:
+            self.coalesce = max(1, int(coalesce))
+        self.topo, self.sources = _build_topology(
+            sim, net, n_workers, self.spec, self.rng, self.coalesce)
         crit = np.zeros(self.n, bool)
         ncrit = max(2, int(0.01 * self.n))
         crit[: ncrit // 2] = True
@@ -282,6 +387,16 @@ class DESTransport:
         self.lt_shard = float(self.lt_per_worker.max())
         self.deadline_shard = self.lt_shard + c
         self._on_early_close = on_early_close
+        # flow pools (DESIGN.md §9): per-worker flow-set free lists
+        # (async/SSP; a worker's next flow can start while the previous
+        # one is still draining, so reuse requires ``idle``), one barrier
+        # gather (bsp), recycled across iterations
+        self._flowsets: Dict[int, List[_DESFlowSet]] = {}
+        self._barrier: Optional[_DESBarrierGather] = None
+        # trunk handles cached once: telemetry sampling must not rebuild
+        # a name->depth dict per sample
+        self._trunks = [self.topo.pipes[f"ps{p}/trunk"]
+                        for p in range(self.n_ps)]
 
     def stop(self) -> None:
         for src in self.sources:
@@ -295,14 +410,22 @@ class DESTransport:
     # -- async/SSP: independent per-worker flow sets ------------------------
     def send(self, worker: int,
              cb: Callable[[np.ndarray, float, bool], None]) -> None:
-        _DESFlowSet(self, worker, cb)
+        pool = self._flowsets.setdefault(worker, [])
+        fs = next((f for f in pool if f.idle), None)
+        if fs is None:
+            fs = _DESFlowSet(self, worker)
+            pool.append(fs)
+        fs.begin(cb)
 
     # -- bsp: one barrier gather per iteration ------------------------------
     def start_gather(self, cb: Callable[[ShardedGatherReceiver], None],
                      ) -> _DESBarrierGather:
-        return _DESBarrierGather(self, cb)
+        if self._barrier is None:
+            self._barrier = _DESBarrierGather(self)
+        self._barrier.begin(cb)
+        return self._barrier
 
     def queue_depth_pkts(self) -> float:
-        """Max trunk queue depth right now (telemetry sampler hook)."""
-        depths = self.topo.queue_depths()
-        return max(depths.values()) if depths else 0.0
+        """Max trunk queue depth right now (telemetry sampler hook);
+        O(n_ps) over cached pipe handles — no dict rebuild per sample."""
+        return max((p.queue_len() for p in self._trunks), default=0.0)

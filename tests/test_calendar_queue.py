@@ -1,0 +1,314 @@
+"""Calendar-queue event engine (DESIGN.md §9): execution-order parity
+with the reference heap engine, FIFO tie-breaks under batch-pop, run()
+semantics (until / max_events / cancel) on the calendar path, and the
+pinned runtime-DES determinism contract across the engine swap."""
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net import simcore
+from repro.net.scenarios import run_scenario
+from repro.net.simcore import Sim
+from repro.optim import make_optimizer
+from repro.runtime import ClusterRuntime, LognormalStragglerCompute
+
+NET = NetConfig(10, 1, 0.001, 4096)
+
+
+def test_engine_selection_and_default():
+    assert Sim().engine == simcore.DEFAULT_ENGINE == "calendar"
+    assert Sim(engine="heap")._wheel is None
+    with pytest.raises(ValueError, match="unknown Sim engine"):
+        Sim(engine="splay")
+
+
+def _random_workload(engine, seed=0, n_events=4000):
+    """Self-extending random schedule with duplicate timestamps and
+    zero-delay reschedules; returns the (now, tag) execution log."""
+    sim = Sim(engine=engine)
+    rng = np.random.default_rng(seed)
+    log = []
+
+    def rec(tag):
+        log.append((sim.now, tag))
+        if len(log) < n_events:
+            dt = float(rng.choice([0.0, 1e-9, 1e-6, 3.7e-5, 2e-3, 0.75]))
+            sim.after(dt, lambda tag=tag: rec(tag + 10_000))
+
+    for i in range(150):
+        sim.at(float(rng.integers(0, 4)) * 1e-3, lambda i=i: rec(i))
+    sim.run()
+    return log
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_calendar_matches_heap_exactly(seed):
+    """Same-seed runs execute the same callbacks at the same times in
+    the same order under either engine — (time, schedule-id) order is
+    the contract both implement."""
+    assert _random_workload("heap", seed) == _random_workload("calendar",
+                                                              seed)
+
+
+def test_same_timestamp_fifo_batch_pop():
+    """All events at one timestamp run FIFO by schedule id, including
+    events scheduled AT that timestamp from within the batch (they get
+    fresh, higher ids and run after every already-queued peer)."""
+    sim = Sim(engine="calendar")
+    order = []
+    for i in range(64):
+        sim.at(1e-3, lambda i=i: order.append(i))
+    # a batch member that enqueues a same-timestamp follow-up mid-batch
+    sim.at(1e-3, lambda: (order.append("spawn"),
+                          sim.after(0.0, lambda: order.append("child"))))
+    sim.run()
+    assert order == list(range(64)) + ["spawn", "child"]
+
+
+def test_calendar_until_and_resume():
+    sim = Sim(engine="calendar")
+    seen = []
+    for t in (0.001, 0.002, 5.0, 9.0):
+        sim.at(t, lambda t=t: seen.append(t))
+    sim.run(until=0.01)
+    assert seen == [0.001, 0.002] and sim.pending() == 2
+    sim.run()
+    assert seen == [0.001, 0.002, 5.0, 9.0] and sim.pending() == 0
+
+
+def test_calendar_cancel_including_batch_mates():
+    sim = Sim(engine="calendar")
+    got = []
+    eids = [sim.at(1e-3, lambda i=i: got.append(i)) for i in range(4)]
+    # event 0 cancels event 2, which sits in the SAME popped batch
+    sim.at(1e-3 / 2, lambda: sim.cancel(eids[2]))
+    sim.cancel(eids[3])
+    sim.run()
+    assert got == [0, 1]
+
+
+def test_calendar_truncation_warns_and_flags():
+    sim = Sim(engine="calendar")
+
+    def chain():
+        sim.after(1e-3, chain)
+
+    chain()
+    with pytest.warns(RuntimeWarning, match="max_events"):
+        sim.run(max_events=5)
+    assert sim.truncated and sim.pending()
+
+
+def test_calendar_wide_timescale_mix():
+    """ns-scale bursts and multi-second gaps in one run: recalibration
+    plus the far heap keep ordering exact across 9 orders of magnitude."""
+    a = _random_workload("heap", seed=3, n_events=6000)
+    b = _random_workload("calendar", seed=3, n_events=6000)
+    assert a == b
+    times = [t for t, _ in b]
+    assert times == sorted(times)           # now never runs backwards
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: batch-popped same-timestamp events preserve FIFO order
+# ---------------------------------------------------------------------------
+
+try:        # property tests run wherever the test extra is installed (CI);
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # the seeded sweeps above cover the seed container
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                    max_size=120))
+    def test_hypothesis_fifo_among_equal_timestamps(slot_ids):
+        """Events drawn onto a handful of duplicate-heavy timestamps
+        must execute in (time, schedule-id) order — i.e. FIFO inside
+        every same-timestamp batch — under the calendar engine, exactly
+        matching the heap engine."""
+        slots = [0.0, 1e-9, 1e-6, 1e-3, 1e-3, 0.5, 2.0]   # dup on purpose
+
+        def drive(engine):
+            sim = Sim(engine=engine)
+            log = []
+            for i, s in enumerate(slot_ids):
+                sim.at(slots[s], lambda i=i: log.append((sim.now, i)))
+            sim.run()
+            return log
+
+        cal = drive("calendar")
+        assert cal == drive("heap")
+        expect = sorted(range(len(slot_ids)),
+                        key=lambda i: (slots[slot_ids[i]], i))
+        assert [i for _, i in cal] == expect
+
+
+# ---------------------------------------------------------------------------
+# pinned runtime DES determinism across the engine swap
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def api():
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    return build(cfg)
+
+
+def _des_history(api, engine, policy, monkeypatch_ctx):
+    monkeypatch_ctx.setattr(simcore, "DEFAULT_ENGINE", engine)
+    w, steps = 4, 4
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    compute = LognormalStragglerCompute(w, base=0.05, seed=11, sigma=0.3,
+                                        straggler_prob=0.25,
+                                        straggler_mult=4.0)
+    kw = {"policy_kw": {"staleness": 2}} if policy == "ssp" else {}
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), NET,
+        n_workers=w, protocol="ltp", policy=policy, compute_model=compute,
+        compute_time=0.05, seed=11, transport="des", **kw)
+    assert rt.sim.engine == engine
+    rt.run(batches(SyntheticCIFAR(seed=3), tc.batch, steps),
+           epoch_steps=2)
+    closes = [(e["t"], e.get("worker", e.get("shard")), e["delivered"])
+              for e in rt.tel.of("early_close")]
+    masks = [(e["t"], e.get("worker"), e["digest"])
+             for e in rt.tel.of("masks")]
+    hist = [(r["step"], r["sim_time"], round(float(r["delivered"]), 12))
+            for r in rt.history]
+    return hist, closes, masks
+
+
+@pytest.mark.parametrize("policy", ["bsp", "async"])
+def test_runtime_des_history_pinned_across_engines(api, policy,
+                                                   monkeypatch):
+    """The determinism contract of the engine swap: iteration close
+    times, delivered fractions, and per-iteration delivery-mask digests
+    of a same-seed packet-level co-simulation are IDENTICAL under the
+    heap and calendar engines."""
+    with monkeypatch.context() as m:
+        heap = _des_history(api, "heap", policy, m)
+    with monkeypatch.context() as m:
+        cal = _des_history(api, "calendar", policy, m)
+    assert heap[0] == cal[0]        # history: steps, sim times, delivered
+    assert heap[1] == cal[1]        # early-close firing times + fractions
+    assert heap[2] == cal[2]        # delivery-mask digests
+
+
+def test_netsim_scenario_pinned_across_engines(monkeypatch):
+    """Scenario-level A/B: the full multi-PS gather (trains, cross
+    traffic machinery, LT/deadline timers) produces identical delivery
+    masks and close times under both engines."""
+    out = {}
+    for engine in ("heap", "calendar"):
+        with monkeypatch.context() as m:
+            m.setattr(simcore, "DEFAULT_ENGINE", engine)
+            rs = run_scenario("multi_ps_gather", "ltp", NET, w=16,
+                              size_bytes=4e5, n_ps=2, iters=2, seed=5,
+                              coalesce=8)
+        out[engine] = rs
+    for a, b in zip(out["heap"], out["calendar"]):
+        assert a.bst_gather == b.bst_gather
+        np.testing.assert_array_equal(a.delivered, b.delivered)
+        np.testing.assert_array_equal(a.masks, b.masks)
+
+
+# ---------------------------------------------------------------------------
+# flow pooling: objects are reused, generations fence the rounds
+# ---------------------------------------------------------------------------
+
+
+def test_des_transport_pools_flows_across_iterations(api):
+    """The bsp DES path must not reconstruct its flow graph each round:
+    the barrier gather, its senders, and the per-flow back pipes are
+    the same objects across iterations, fenced by a bumped generation."""
+    w, steps = 4, 3
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(), NET, n_workers=w,
+        protocol="ltp", policy="bsp", compute_time=0.05, seed=0,
+        transport="des")
+    rt.run(batches(SyntheticCIFAR(seed=0), tc.batch, steps))
+    tr = rt.net_des
+    barrier = tr._barrier
+    assert barrier is not None and barrier.gen == steps
+    assert len(barrier._senders) == w * tr.n_ps      # one per (ps, worker)
+    for s in barrier._senders.values():
+        assert s.gen == steps                        # reset every round
+    assert barrier.sharded.shard(0).gen == steps
+
+
+def test_des_flowset_pool_reuse_async(api):
+    w, steps = 4, 4
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), NET,
+        n_workers=w, protocol="ltp", policy="async", compute_time=0.05,
+        seed=0, transport="des")
+    rt.run(batches(SyntheticCIFAR(seed=0), tc.batch, steps))
+    pools = rt.net_des._flowsets
+    assert set(pools) == set(range(w))
+    for worker, pool in pools.items():
+        # far fewer flow-set objects than iterations: reuse worked
+        assert 1 <= len(pool) < steps
+        assert sum(f.gen for f in pool) == steps     # every round served
+        assert all(f.idle for f in pool)             # all rounds closed
+
+
+def test_stale_generation_restops_orphaned_sender(api):
+    """A sender whose Early-Close stop was lost keeps retransmitting
+    into receivers that have advanced a generation; the on_stale hook
+    must re-stop it — but only while it still lives the stale
+    generation (a reset sender must not be killed by its past round)."""
+    from repro.net.simcore import Packet
+    from repro.runtime.transport import DESTransport
+
+    w = 2
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=2)
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(), NET, n_workers=w,
+        protocol="ltp", policy="bsp", compute_time=0.05, seed=0,
+        transport="des")
+    assert isinstance(rt.net_des, DESTransport)
+    rt.run(batches(SyntheticCIFAR(seed=0), tc.batch, 2))
+    barrier = rt.net_des._barrier
+    shard = barrier.sharded.shard(0)
+    s = barrier._senders[(0, 0)]
+    # forge an orphan: sender pinned one generation behind the receiver
+    s.reset(gen=shard.gen - 1)
+    s.done = False
+    stale = Packet(0, 3, 100, kind="data",
+                   meta={"t": 0.0, "order": 0, "g": shard.gen - 1})
+    shard.on_data(stale)
+    rt.sim.run()                    # deliver the re-sent stop
+    assert s.done and s.stopped     # orphan was stopped, not ignored
+    # a CURRENT-generation sender must never be stopped by stale data
+    s2 = barrier._senders[(0, 1)]
+    s2.reset(gen=shard.gen)
+    s2.done = False
+    shard.on_data(Packet(1, 3, 100, kind="data",
+                         meta={"t": 0.0, "order": 0, "g": shard.gen - 1}))
+    rt.sim.run()
+    assert not s2.stopped
+
+
+def test_cancelled_ghost_beyond_until_pending_parity():
+    """A cancelled event beyond ``until`` must be discarded by both
+    engines (the heap drops a cancelled head regardless of until), so
+    pending()-driven driver loops terminate identically."""
+    for engine in ("heap", "calendar"):
+        sim = Sim(engine=engine)
+        sim.cancel(sim.at(5.0, lambda: None))
+        sim.run(until=1.0)
+        assert sim.pending() == 0, engine
+        # near-wheel variant: a live event pulls the ghost into the wheel
+        sim2 = Sim(engine=engine)
+        sim2.at(0.5, lambda: None)
+        sim2.cancel(sim2.at(0.9, lambda: None))
+        sim2.run(until=0.7)
+        assert sim2.pending() == 0, engine

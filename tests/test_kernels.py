@@ -66,3 +66,31 @@ def test_randomk(shape, k):
     out = ops.randomk_sparsify(x, u, k)
     expect = ref.randomk_ref(x, u, k)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_ops_donate_variants_match_and_cache_separately():
+    """donate=True must be numerically identical to donate=False (on
+    CPU donation is a no-op; on TPU it aliases the input buffer), and
+    each (interpret, donate) variant gets its own cached jit so flags
+    can't cross-contaminate compiled executables."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    pkts = jnp.asarray(rng.normal(size=(33, 250)).astype(np.float32))
+    mask = jnp.asarray((rng.random(33) < 0.6).astype(np.float32))
+    ref = ops.ltp_dropfill(pkts, mask)
+    # fresh buffer per donating call: a donated array may be consumed
+    don = ops.ltp_dropfill(jnp.array(pkts), mask, donate=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(don))
+
+    pkts_w = jnp.asarray(rng.normal(size=(3, 17, 250)).astype(np.float32))
+    mask_w = jnp.asarray((rng.random((3, 17)) < 0.6).astype(np.float32))
+    ref = ops.ltp_packet_reduce(pkts_w, mask_w, compensation="count")
+    don = ops.ltp_packet_reduce(jnp.array(pkts_w), mask_w,
+                                compensation="count", donate=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(don))
+
+    assert ops._variant("dropfill", True, False) is \
+        ops._variant("dropfill", True, False)
+    assert ops._variant("dropfill", True, False) is not \
+        ops._variant("dropfill", True, True)

@@ -34,7 +34,7 @@ def test_sim_truncation_warns_and_flags():
     chain()
     with pytest.warns(RuntimeWarning, match="max_events"):
         sim.run(max_events=5)
-    assert sim.truncated and sim._heap
+    assert sim.truncated and sim.pending()
     # a clean run leaves the flag untouched
     sim2 = Sim()
     sim2.after(0.1, lambda: None)

@@ -149,3 +149,70 @@ def test_mask_trace_feeds_sync():
     hist = tr.run(batches(SyntheticCIFAR(seed=1), tc.batch, tc.steps))
     for h in hist:
         assert 0.0 < h["delivered"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# sync_backend="auto" (DESIGN.md §9): never a regression, always valid
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_rules():
+    """auto -> python in interpret mode and below the crossover; pallas
+    only for compiled kernels on large streams. Explicit backends pass
+    through untouched."""
+    assert ls.resolve_backend("python", 10**9, False) == "python"
+    assert ls.resolve_backend("pallas", 1, True) == "pallas"
+    assert ls.resolve_backend("auto", 10**12, True) == "python"
+    assert ls.resolve_backend("auto", ls.AUTO_CROSSOVER_ELEMS - 1,
+                              False) == "python"
+    assert ls.resolve_backend("auto", ls.AUTO_CROSSOVER_ELEMS,
+                              False) == "pallas"
+
+
+@pytest.mark.parametrize("comp", ["paper", "count", "expected"])
+def test_reduce_packet_stream_auto_matches_python(papernet_grads, comp):
+    """In interpret mode auto IS the python backend — bitwise."""
+    plan, flat_w, w = papernet_grads
+    rng = np.random.default_rng(9)
+    masks = (rng.random((w, plan.n_packets)) < 0.7).astype(np.float32)
+    ltp = LTPConfig(compensation=comp, sync_backend="auto")
+    got = ls.reduce_packet_stream(jnp.asarray(flat_w), jnp.asarray(masks),
+                                  ltp, w, expected_frac=0.7)
+    ref = ls.reduce_packet_stream(jnp.asarray(flat_w), jnp.asarray(masks),
+                                  ltp, w, expected_frac=0.7,
+                                  backend="python")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_apply_delivery_auto_matches_python():
+    rng = np.random.default_rng(4)
+    pkts = jnp.asarray(rng.normal(size=(37, 250)).astype(np.float32))
+    mask = jnp.asarray((rng.random(37) < 0.5).astype(np.float32))
+    auto = ls.apply_delivery(pkts, mask, backend="auto")
+    ref = ls.apply_delivery(pkts, mask, backend="python")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(ref))
+
+
+def test_pstrainer_auto_backend_end_to_end():
+    """PSTrainer under sync_backend='auto' matches the python trajectory
+    exactly on CPU (interpret mode resolves auto -> python)."""
+    from repro.data.synthetic import SyntheticCIFAR, batches
+    from repro.optim import sgd_momentum
+    from repro.train.dp_sim import PSTrainer
+
+    cfg = get_config("papernet").replace(d_model=8, n_layers=2)
+    api = build(cfg)
+    tc = TrainConfig(batch=32, lr=0.1, steps=2)
+    data = SyntheticCIFAR(seed=1)
+    params = {}
+    for be in ("python", "auto"):
+        ltp = LTPConfig(sync_backend=be, compensation="count",
+                        data_pct_threshold=0.6)
+        tr = PSTrainer(api, sgd_momentum(), tc, ltp,
+                       NetConfig(10, 1, 0.01, 4096), n_workers=4,
+                       protocol="ltp", compute_time=0.01, seed=0)
+        tr.run(batches(data, tc.batch, tc.steps))
+        params[be] = tr.params
+    for a, b in zip(jax.tree.leaves(params["python"]),
+                    jax.tree.leaves(params["auto"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

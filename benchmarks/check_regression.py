@@ -42,7 +42,7 @@ import sys
 from typing import Dict, List, Tuple
 
 DEFAULT_FILES = ("BENCH_netsim.json", "BENCH_kernels.json",
-                 "BENCH_runtime.json")
+                 "BENCH_runtime.json", "BENCH_faults.json")
 
 #: metric-name suffix -> direction ("up" = bigger is better)
 RULES: Tuple[Tuple[str, str], ...] = (
@@ -68,6 +68,16 @@ FLOORS: Dict[str, float] = {
     "grid64_ref_per_packet_events_per_sec": 4000.0,
 }
 
+#: absolute quality ceilings — FAIL when current > ceiling. Unlike wall
+#: clocks these are seeded, machine-independent metrics, so no runner
+#: budget applies: the des16 fault acceptance (DESIGN.md §10 — two
+#: worker crashes plus a PS failover must cost < 10% of final loss
+#: relative to the fault-free twin) is gated at its spec value, not at
+#: whatever baseline was last committed.
+CEILINGS: Dict[str, float] = {
+    "fault_des16_final_loss_ratio": 1.10,
+}
+
 
 def _load(path: str) -> dict:
     with open(path) as f:
@@ -89,19 +99,22 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
     failures = []
     for key, base in sorted(baseline.items()):
         direction = next((d for suf, d in RULES if key.endswith(suf)), None)
-        if direction is None or base == 0:
+        gated = direction is not None and base != 0
+        if not gated and key not in CEILINGS:
             continue
         if key not in current:
             failures.append(f"{key}: missing from current record "
                             f"(baseline {base})")
             continue
         cur = current[key]
-        ratio = cur / base
-        ok = ratio <= max_ratio if direction == "down" else \
-            ratio >= 1.0 / max_ratio
+        ratio = cur / base if base else float("nan")
+        ok = (not gated) or (ratio <= max_ratio if direction == "down"
+                             else ratio >= 1.0 / max_ratio)
         floor = FLOORS.get(key)
         floor_ok = floor is None or cur >= floor * floor_scale
-        mark = "ok" if ok and floor_ok else "REGRESSION"
+        ceiling = CEILINGS.get(key)
+        ceiling_ok = ceiling is None or cur <= ceiling
+        mark = "ok" if ok and floor_ok and ceiling_ok else "REGRESSION"
         print(f"  {key:45s} base={base:<12g} cur={cur:<12g} "
               f"x{ratio:.2f} [{mark}]")
         if not ok:
@@ -115,7 +128,12 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
                 f"{floor * floor_scale:g} "
                 f"(delta {cur - floor * floor_scale:+g}; the §9 runtime "
                 f"fast path must not silently ratchet away)")
-    # floors also apply to metrics with no baseline entry yet
+        if not ceiling_ok:
+            failures.append(
+                f"{key}: {cur:g} above absolute ceiling {ceiling:g} "
+                f"(delta {cur - ceiling:+g}; the §10 fault-tolerance "
+                f"acceptance must not silently degrade)")
+    # floors/ceilings also apply to metrics with no baseline entry yet
     for key, floor in sorted(FLOORS.items()):
         if key in baseline or key not in current:
             continue
@@ -125,6 +143,14 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
                 f"{key}: {cur:g} below absolute floor "
                 f"{floor * floor_scale:g} (no baseline; delta "
                 f"{cur - floor * floor_scale:+g})")
+    for key, ceiling in sorted(CEILINGS.items()):
+        if key in baseline or key not in current:
+            continue
+        cur = current[key]
+        if cur > ceiling:
+            failures.append(
+                f"{key}: {cur:g} above absolute ceiling {ceiling:g} "
+                f"(no baseline; delta {cur - ceiling:+g})")
     return failures
 
 

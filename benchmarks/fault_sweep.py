@@ -1,0 +1,143 @@
+"""Fault-injection sweep: training cost of worker churn and PS failover
+on the elastic cluster runtime (DESIGN.md §10).
+
+Two questions the fault layer must answer with numbers:
+
+* **churn overhead** — how much simulated time and final loss a given
+  crash rate costs, per policy, relative to the fault-free run on the
+  same seed (the analytic grid below);
+* **failover acceptance** — the headline gate: a 16-worker packet-level
+  DES run that loses two workers *and* the parameter server mid-train
+  must still converge. ``fault_des16_final_loss_ratio`` (faulted final
+  loss / fault-free final loss) is ceiling-gated at 1.10 by
+  ``benchmarks.check_regression``: elasticity that silently costs more
+  than 10% of final loss is a regression, not a feature.
+
+Every cell is seeded end to end (schedule, compute jitter, packet loss),
+so the records are machine-independent and bitwise reproducible.
+
+  PYTHONPATH=src python -m benchmarks.fault_sweep --quick
+  PYTHONPATH=src python -m benchmarks.run --only fault_sweep
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.optim import make_optimizer
+from repro.runtime import ClusterRuntime, FaultEvent, FaultSchedule
+
+from benchmarks.common import emit
+from benchmarks.sweep_scenarios import write_bench
+
+NET = NetConfig(10, 1, 0.001, 4096)
+
+#: the des16 acceptance scenario: two crashes straddling a PS failure,
+#: snapshot grid armed. Times sit mid-train for an 8-step, 0.05 s/iter
+#: run so the crashes fence live flows and the failover really rolls
+#: back applied state (not a warm-up no-op).
+DES16_FAULTS = FaultSchedule([
+    FaultEvent(0.07, "worker_crash", target=3),
+    FaultEvent(0.13, "worker_crash", target=11),
+    FaultEvent(0.20, "ps_fail", target=0, recover_s=0.05),
+])
+
+
+def _cell(api, tc, w, policy, steps, *, faults=None, transport="analytic",
+          checkpoint_every_s=0.0, seed=11):
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), NET,
+        n_workers=w, protocol="ltp", policy=policy, compute_time=0.05,
+        seed=seed, transport=transport, faults=faults,
+        checkpoint_every_s=checkpoint_every_s)
+    t0 = time.time()
+    rt.run(batches(SyntheticCIFAR(seed=3), tc.batch, steps))
+    wall = time.time() - t0
+    s = rt.tel.summary()
+    return {
+        "scenario": f"fault_w{w}", "policy": policy, "transport": transport,
+        "n_faults": s.get("n_faults", 0),
+        "n_flow_torn": s.get("n_flow_torn", 0),
+        "n_ps_lost": s.get("n_ps_lost", 0),
+        "n_failovers": s.get("n_failovers", 0),
+        "simtime_s": round(rt.sim_time, 4),
+        "final_loss": round(float(rt.history[-1]["loss"]), 6),
+        "n_steps_done": len(rt.history),
+        "wall_s": round(wall, 2),
+    }
+
+
+def run(quick: bool = True):
+    steps = 8 if quick else 12
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    rows = []
+    metrics = {}
+    t_start = time.time()
+
+    # churn-overhead grid: crash rate x policy, analytic transport,
+    # rejoining crashers — overhead relative to the rate-0 twin
+    w = 16
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    for policy in ("bsp", "async"):
+        base_row = None
+        for rate in (0.0, 1.0, 2.0):
+            sched = FaultSchedule.random(
+                w, steps * 0.05 * 3.0, seed=7, crash_rate=rate,
+                rejoin_after_s=0.1, min_active=max(2, w // 2))
+            row = _cell(api, tc, w, policy, steps,
+                        faults=sched, checkpoint_every_s=0.05)
+            row["crash_rate"] = rate
+            rows.append(row)
+            if rate == 0.0:
+                base_row = row
+            else:
+                key = f"fault_w{w}_{policy}_rate{rate:g}"
+                metrics[f"{key}_sim_overhead"] = round(
+                    row["simtime_s"] / base_row["simtime_s"], 3)
+                metrics[f"{key}_loss_ratio"] = round(
+                    row["final_loss"] / base_row["final_loss"], 4)
+
+    # failover acceptance: 16-worker DES, 2 crashes + PS failover,
+    # against the fault-free twin on the same seed
+    tc16 = TrainConfig(batch=4 * 16, lr=0.05, steps=steps)
+    free = _cell(api, tc16, 16, "bsp", steps, transport="des")
+    free["scenario"] = "fault_des16_free"
+    rows.append(free)
+    faulted = _cell(api, tc16, 16, "bsp", steps, transport="des",
+                    faults=DES16_FAULTS, checkpoint_every_s=0.05)
+    faulted["scenario"] = "fault_des16"
+    rows.append(faulted)
+    assert faulted["n_steps_done"] == steps, \
+        "faulted des16 run did not complete every step"
+    assert faulted["n_failovers"] == 1
+    ratio = faulted["final_loss"] / free["final_loss"]
+    metrics["fault_des16_final_loss_ratio"] = round(ratio, 4)
+    metrics["fault_des16_sim_overhead"] = round(
+        faulted["simtime_s"] / free["simtime_s"], 3)
+    metrics["fault_des16_n_flow_torn"] = faulted["n_flow_torn"]
+    metrics["fault_des16_n_ps_lost"] = faulted["n_ps_lost"]
+    metrics["fault_sweep_wall_s"] = round(time.time() - t_start, 3)
+    write_bench(metrics, quick, "BENCH_faults.json")
+    emit(rows, "fault_sweep")
+    print(f"des16 failover: final-loss ratio {ratio:.4f} "
+          f"(2 crashes + PS failover vs fault-free, ceiling 1.10), "
+          f"sim overhead {metrics['fault_des16_sim_overhead']}x")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid (default: full)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,13 @@
 """Render the README perf table from the committed BENCH records.
 
   PYTHONPATH=src python -m benchmarks.perf_table \
-      [path/to/BENCH_netsim.json [path/to/BENCH_runtime.json]]
+      [BENCH_netsim.json [BENCH_runtime.json [BENCH_faults.json]]]
 
 Prints a GitHub-flavored markdown table; the README "Performance" section
 is this script's output, regenerated whenever the baselines are
 refreshed. Netsim rows come from ``BENCH_netsim.json``; the runtime DES
-rows (the §9 fast-path acceptance metrics) from ``BENCH_runtime.json``.
+rows (the §9 fast-path acceptance metrics) from ``BENCH_runtime.json``;
+the fault-tolerance acceptance row (§10) from ``BENCH_faults.json``.
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ def _metrics(path: str) -> dict:
         return json.load(f).get("metrics", {})
 
 
-def render(path: str, runtime_path: str = None) -> str:
+def render(path: str, runtime_path: str = None,
+           faults_path: str = None) -> str:
     m = _metrics(path)
     k = m.get("grid64_coalesce", "?")
     lines = [
@@ -60,6 +62,15 @@ def render(path: str, runtime_path: str = None) -> str:
             k64 = r.get("runtime_des64_coalesce", "?")
             lines.append(f"| runtime DES co-sim, 64 workers bsp/ltp "
                          f"(trains of {k64}) | — | {des64:,.0f} |")
+    if faults_path and os.path.exists(faults_path):
+        fm = _metrics(faults_path)
+        ratio = fm.get("fault_des16_final_loss_ratio")
+        if ratio is not None:
+            over = fm.get("fault_des16_sim_overhead", "?")
+            lines.append(
+                f"| fault des16: 2 crashes + PS failover, final-loss "
+                f"ratio {ratio:g} (ceiling 1.10), sim overhead {over}x "
+                f"| — | — |")
     return "\n".join(lines)
 
 
@@ -68,7 +79,9 @@ def main(argv=None) -> int:
     path = argv[0] if argv else os.path.join(REPO_ROOT, "BENCH_netsim.json")
     runtime_path = argv[1] if len(argv) > 1 else os.path.join(
         REPO_ROOT, "BENCH_runtime.json")
-    print(render(path, runtime_path))
+    faults_path = argv[2] if len(argv) > 2 else os.path.join(
+        REPO_ROOT, "BENCH_faults.json")
+    print(render(path, runtime_path, faults_path))
     return 0
 
 

@@ -13,6 +13,7 @@ import argparse
 import time
 
 from benchmarks import (
+    fault_sweep,
     fig3_incast_fct,
     fig4_loss_tolerance,
     fig5_randomk_topk,
@@ -36,6 +37,7 @@ MODULES = {
     "scenario_sweep": sweep_scenarios,
     "kernel_bench": kernel_bench,
     "runtime_sweep": runtime_sweep,
+    "fault_sweep": fault_sweep,
 }
 
 

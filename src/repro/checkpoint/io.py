@@ -36,18 +36,41 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     np.savez(path, **arrays)
 
 
-def restore_checkpoint(path: str, like: Any):
-    """Restores into the structure of ``like``. Returns (tree, step)."""
+def restore_checkpoint(path: str, like: Any, strict: bool = True):
+    """Restores into the structure of ``like``. Returns (tree, step).
+
+    Raises ``KeyError`` naming every path ``like`` requires that the
+    archive lacks, and ``ValueError`` on shape mismatches or (with
+    ``strict``, the default) archive paths absent from ``like`` — a
+    silent partial restore is how failover corrupts a model.
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
     step = int(data["__step__"])
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_path_str(p) for p, _ in flat]
+    missing = sorted(k for k in keys if k not in data.files)
+    if missing:
+        raise KeyError(
+            f"checkpoint {path!r} is missing {len(missing)} path(s) "
+            f"required by `like`: {missing}")
+    if strict:
+        extra = sorted(set(data.files) - set(keys) - {"__step__"})
+        if extra:
+            raise ValueError(
+                f"checkpoint {path!r} holds {len(extra)} path(s) absent "
+                f"from `like`: {extra} (pass strict=False to ignore)")
     leaves = []
-    for p, old in flat:
-        key = _path_str(p)
+    for (p, old), key in zip(flat, keys):
         arr = data[key]
-        assert arr.shape == tuple(old.shape), (key, arr.shape, old.shape)
-        leaves.append(jax.numpy.asarray(arr, dtype=old.dtype))
+        want = tuple(np.shape(old))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)}, "
+                f"expected {want}")
+        dtype = getattr(old, "dtype", None)
+        leaves.append(jax.numpy.asarray(arr) if dtype is None
+                      else jax.numpy.asarray(arr, dtype=dtype))
     _, treedef2 = jax.tree_util.tree_flatten(like)
     return jax.tree_util.tree_unflatten(treedef2, leaves), step

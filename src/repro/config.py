@@ -179,9 +179,30 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection knobs for the elastic runtime (DESIGN.md §10).
+
+    Converted into a concrete ``runtime.faults.FaultSchedule`` once the
+    run horizon is known (``FaultSchedule.random`` takes ``t_end``); the
+    all-zero default draws an empty schedule, which the runtime treats
+    exactly like no fault layer at all.
+    """
+
+    crash_rate: float = 0.0          # worker crashes, per worker-second
+    rejoin_after_s: Optional[float] = None  # crashed slots rejoin after this
+    leave_rate: float = 0.0          # graceful departures, per worker-second
+    ps_fail_at: Tuple[float, ...] = ()      # sim times of PS failures
+    ps_recovery_s: float = 0.05      # PS downtime before checkpoint failover
+    checkpoint_every_s: float = 0.0  # snapshot grid (0 = initial state only)
+    min_active: int = 1              # random schedules never go below this
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     mesh: MeshConfig = field(default_factory=MeshConfig)
     ltp: LTPConfig = field(default_factory=LTPConfig)
     net: NetConfig = field(default_factory=NetConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
+    faults: Optional[FaultConfig] = None

@@ -160,6 +160,11 @@ class PSGatherReceiver:
         #: retransmissions and the orphan would pump forever.
         self.on_stale: Optional[Callable[[int, int], None]] = None
         self._check_eids: List[int] = []
+        #: flows abandoned mid-gather (node death, DESIGN.md §10): their
+        #: receivers are closed, they are excluded from the close rule,
+        #: and their delivery masks report zeros — a dead node's partial
+        #: gradient must never reach the reduction.
+        self._dead: Set[int] = set()
         for f in flows:
             self.flows[f] = LTPFlowReceiver(sim, lambda p: None, f)
         self.reset()
@@ -173,6 +178,7 @@ class PSGatherReceiver:
             self.gen = gen
         for fr in self.flows.values():
             fr.reset()
+        self._dead.clear()
         self.t0 = self.sim.now
         self.closed = False
         self.close_time: Optional[float] = None
@@ -180,6 +186,33 @@ class PSGatherReceiver:
             self.sim.cancel(eid)
         self._check_eids = [self.sim.at(self.t0 + self.lt, self._check),
                             self.sim.at(self.t0 + self.deadline, self._check)]
+
+    def abandon_flow(self, flow: int) -> None:
+        """Drop ``flow`` from this gather mid-round (its node died or
+        never joined): the per-flow receiver closes, the flow no longer
+        gates the close rule, and its mask reports zeros. Re-evaluates
+        the close rule — the death of the last straggler may complete
+        the barrier."""
+        if flow not in self.flows or flow in self._dead:
+            return
+        self._dead.add(flow)
+        self.flows[flow].closed = True
+        if not self.closed:
+            self._check()
+
+    def deactivate(self, gen: Optional[int] = None) -> None:
+        """Hard-stop the whole gather (PS death): close every flow,
+        cancel the LT/deadline timers, and optionally bump the
+        generation so in-flight data is fenced out as stale. The pooled
+        receiver revives through ``reset``."""
+        self.closed = True
+        for fr in self.flows.values():
+            fr.closed = True
+        for eid in self._check_eids:
+            self.sim.cancel(eid)
+        self._check_eids = []
+        if gen is not None:
+            self.gen = gen
 
     def _stale(self, pkt: Packet) -> bool:
         g = pkt.meta.get("g") if isinstance(pkt.meta, dict) else None
@@ -235,19 +268,25 @@ class PSGatherReceiver:
                 fr.on_data_train(fitems, _noop)
         self._check()
 
+    def _live(self):
+        """Flow receivers still gating the close rule (not abandoned)."""
+        if not self._dead:
+            return self.flows.values()
+        return [fr for f, fr in self.flows.items() if f not in self._dead]
+
     @property
     def agg_pct(self) -> float:
-        ps = [f.pct for f in self.flows.values()]
+        ps = [f.pct for f in self._live()]
         return float(np.mean(ps)) if ps else 0.0
 
     @property
     def all_full(self) -> bool:
         return all(f.n is not None and len(f.received) >= f.n
-                   for f in self.flows.values())
+                   for f in self._live())
 
     @property
     def criticals_done(self) -> bool:
-        return all(f.criticals_done for f in self.flows.values())
+        return all(f.criticals_done for f in self._live())
 
     def _check(self):
         if self.closed:
@@ -277,15 +316,20 @@ class PSGatherReceiver:
 
     # --- results -------------------------------------------------------------
     def delivered_fracs(self) -> np.ndarray:
-        return np.array([f.pct for f in self.flows.values()])
+        return np.array([0.0 if f in self._dead else fr.pct
+                         for f, fr in self.flows.items()])
 
     def delivery_masks(self) -> np.ndarray:
         """(W, n) bool — per-(worker, packet) delivery state at close.
 
         This is the mask the PS-side aggregation consumes: True packets
         carry gradient payload, False packets are bubble-filled (the exact
-        input shape of ``kernels.packet_reduce``, DESIGN.md §7)."""
-        ms = [f.delivered_mask() for f in self.flows.values()]
+        input shape of ``kernels.packet_reduce``, DESIGN.md §7). An
+        abandoned flow's row is all-False: whatever a dead node managed
+        to land before it died is provably dropped."""
+        ms = [np.zeros_like(fr.delivered_mask()) if f in self._dead
+              else fr.delivered_mask()
+              for f, fr in self.flows.items()]
         n = max((len(m) for m in ms), default=0)
         if n == 0:
             return np.zeros((len(ms), 0), bool)
@@ -293,8 +337,9 @@ class PSGatherReceiver:
 
     def full_times(self) -> np.ndarray:
         return np.array([
-            (f.t_full - self.t0) if f.t_full is not None else np.inf
-            for f in self.flows.values()
+            (fr.t_full - self.t0)
+            if fr.t_full is not None and f not in self._dead else np.inf
+            for f, fr in self.flows.items()
         ])
 
     def bst_gather(self) -> float:
@@ -337,6 +382,17 @@ class ShardedGatherReceiver:
         """Re-arm every shard for a fresh iteration (flow pooling)."""
         for s in self.shards:
             s.reset(gen)
+
+    def abandon_worker(self, worker: int) -> None:
+        """Drop ``worker`` from every shard's close rule (node death)."""
+        for s in self.shards:
+            s.abandon_flow(worker)
+
+    def deactivate(self, gen: Optional[int] = None) -> None:
+        """Hard-stop every shard (PS death); see
+        ``PSGatherReceiver.deactivate``."""
+        for s in self.shards:
+            s.deactivate(gen)
 
     @property
     def all_closed(self) -> bool:

@@ -252,6 +252,20 @@ class _TcpBase:
         self.start_time: Optional[float] = None
         self.bytes_acked = 0
 
+    def kill(self) -> None:
+        """Hard-stop this sender (node death / pooled teardown): no
+        completion callback, no further transmissions, all timers
+        cancelled. In-flight ACKs fall on ``done`` and are ignored; the
+        pooled sender revives through ``reset(gen=...)``."""
+        self.done = True
+        if self.rto_event is not None:
+            self.sim.cancel(self.rto_event)
+        self.rto_event = None
+        pt = getattr(self, "pacing_timer", None)
+        if pt is not None:
+            self.sim.cancel(pt)
+            self.pacing_timer = None
+
     # --- cwnd law hooks -----------------------------------------------------
     def on_ack_growth(self, newly: int):
         if self.cwnd < self.ssthresh:
@@ -664,6 +678,20 @@ class LTPSender:
         self._phase = 0
         self._phase_start = 0.0
         self._last_check = -1.0
+        if self.watchdog is not None:
+            self.sim.cancel(self.watchdog)
+        self.watchdog = None
+        if self.pacing_timer is not None:
+            self.sim.cancel(self.pacing_timer)
+        self.pacing_timer = None
+
+    def kill(self) -> None:
+        """Hard-stop (node death / pooled teardown): the flow goes
+        permanently silent — no stop handshake, no callbacks, timers
+        cancelled. Any traffic still in flight falls on ``done``/stale
+        generation checks. ``reset(gen=...)`` revives the pooled flow."""
+        self.stopped = True
+        self.done = True
         if self.watchdog is not None:
             self.sim.cancel(self.watchdog)
         self.watchdog = None

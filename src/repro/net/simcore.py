@@ -243,9 +243,13 @@ class Sim:
         self._cal_t = self.now
 
     def every(self, dt: float, fn: Callable[[], None],
-              until: float = float("inf")) -> Callable[[], None]:
+              until: float = float("inf"),
+              start: Optional[float] = None) -> Callable[[], None]:
         """Periodic actor hook: run ``fn`` every ``dt`` seconds of sim
-        time starting at ``now + dt`` (telemetry samplers, watchdogs).
+        time starting at ``now + dt`` (telemetry samplers, watchdogs),
+        or at absolute time ``start`` if given — e.g. ``start=now`` runs
+        the first tick immediately as a sim event (the runtime's
+        checkpoint grid anchors its t=0 snapshot this way).
         Returns a zero-argument canceller."""
         state = {"eid": None, "stopped": False}
 
@@ -255,7 +259,8 @@ class Sim:
             fn()
             state["eid"] = self.after(dt, tick)
 
-        state["eid"] = self.after(dt, tick)
+        state["eid"] = (self.after(dt, tick) if start is None
+                        else self.at(start, tick))
 
         def cancel_hook():
             state["stopped"] = True

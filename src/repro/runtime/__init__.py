@@ -8,6 +8,13 @@ from repro.runtime.compute import (  # noqa: F401
     TraceCompute,
     make_compute_model,
 )
+from repro.runtime.faults import (  # noqa: F401
+    FAULT_KINDS,
+    FaultEvent,
+    FaultSchedule,
+    ShardLedger,
+    schedule_from_config,
+)
 from repro.runtime.policies import (  # noqa: F401
     POLICIES,
     AggregationPolicy,

@@ -26,6 +26,11 @@ class ComputeModel:
     """Interface: seconds of gradient-computation time per (worker,
     iteration)."""
 
+    #: extra seconds charged to the first iteration after a worker
+    #: (re)joins mid-run — cold caches, params re-fetch, JIT re-warm.
+    #: The fault layer (runtime/faults.py) reads this; 0 = free rejoin.
+    rejoin_penalty_s: float = 0.0
+
     def sample(self, worker: int, iteration: int) -> float:
         raise NotImplementedError
 
@@ -48,8 +53,10 @@ class DeterministicCompute(ComputeModel):
     ``mults`` — heterogeneous-but-stable hardware."""
 
     def __init__(self, n_workers: int, base: float = 0.05,
-                 mults: Optional[np.ndarray] = None, seed: int = 0):
+                 mults: Optional[np.ndarray] = None, seed: int = 0,
+                 rejoin_penalty_s: float = 0.0):
         self.base = float(base)
+        self.rejoin_penalty_s = float(rejoin_penalty_s)
         self.mults = (np.ones(n_workers) if mults is None
                       else np.asarray(mults, float))
         if len(self.mults) != n_workers:
@@ -70,8 +77,10 @@ class LognormalStragglerCompute(ComputeModel):
 
     def __init__(self, n_workers: int, base: float = 0.05,
                  sigma: float = 0.2, straggler_prob: float = 0.1,
-                 straggler_mult: float = 4.0, seed: int = 0):
+                 straggler_mult: float = 4.0, seed: int = 0,
+                 rejoin_penalty_s: float = 0.0):
         self.base = float(base)
+        self.rejoin_penalty_s = float(rejoin_penalty_s)
         self.sigma = float(sigma)
         self.straggler_prob = float(straggler_prob)
         self.straggler_mult = float(straggler_mult)
@@ -93,7 +102,8 @@ class TraceCompute(ComputeModel):
     every worker."""
 
     def __init__(self, n_workers: int, trace: np.ndarray, base: float = 1.0,
-                 seed: int = 0):
+                 seed: int = 0, rejoin_penalty_s: float = 0.0):
+        self.rejoin_penalty_s = float(rejoin_penalty_s)
         t = np.asarray(trace, float)
         if t.ndim == 1:
             t = np.tile(t[:, None], (1, n_workers))

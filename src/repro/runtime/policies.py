@@ -56,9 +56,30 @@ class AggregationPolicy:
     """Interface; concrete policies override the four decision hooks."""
 
     name = "?"
+    active: frozenset = frozenset()
 
     def bind(self, n_workers: int) -> None:
         self.w = n_workers
+        self.active = frozenset(range(n_workers))
+
+    # -- degraded membership (DESIGN.md §10) --------------------------------
+    def on_membership(self, active) -> None:
+        """The fault layer's membership hook: ``active`` is the set of
+        worker slots currently alive. bsp re-barriers on the surviving
+        set; async/ssp rescale staleness damping and contribution
+        weights by the effective membership."""
+        self.active = frozenset(active)
+
+    def membership_scale(self) -> float:
+        """W / W_eff — restores the per-contribution effective step when
+        fewer than W slots feed the 1/W reduction. 1.0 at full
+        membership (and on an unbound policy, which some unit tests
+        drive directly)."""
+        w = getattr(self, "w", 0)
+        n = len(getattr(self, "active", ()))
+        if not w or not n or n == w:
+            return 1.0
+        return w / n
 
     # -- worker-side gate ---------------------------------------------------
     def may_start(self, worker: int, iteration: int) -> bool:
@@ -86,6 +107,15 @@ class AggregationPolicy:
         """Gradients rejected as too stale since the last call."""
         return []
 
+    def drop_pending(self) -> List[PendingGrad]:
+        """Discard every parked gradient (PS failover tore the state from
+        under them); returns the dropped batch for telemetry accounting."""
+        return []
+
+    def rollback(self, step: int) -> None:
+        """PS failover restored the model at ``step`` applied iterations;
+        policies with an iteration frontier re-anchor there."""
+
     def pending_count(self) -> int:
         """Gradients parked at the PS right now (telemetry queue depth)."""
         return 0
@@ -109,13 +139,31 @@ class BSPPolicy(AggregationPolicy):
 
     def ready(self) -> List[PendingGrad]:
         cur = self._buf.get(self.committed, {})
-        if len(cur) < self.w:
+        if not self.active or not self.active <= set(cur):
             return []
         del self._buf[self.committed]
         return [cur[f] for f in sorted(cur)]
 
     def on_applied(self, batch: List[PendingGrad]) -> None:
         self.committed += 1
+
+    def on_membership(self, active) -> None:
+        # re-barrier on the surviving set: dead slots can no longer be
+        # waited on, and their parked gradients are unreachable
+        super().on_membership(active)
+        for d in self._buf.values():
+            for wk in [wk for wk in d if wk not in self.active]:
+                del d[wk]
+        self._buf = {it: d for it, d in self._buf.items() if d}
+
+    def rollback(self, step: int) -> None:
+        self.committed = int(step)
+        self._buf.clear()
+
+    def drop_pending(self) -> List[PendingGrad]:
+        out = [g for d in self._buf.values() for g in d.values()]
+        self._buf.clear()
+        return out
 
     def pending_count(self) -> int:
         return sum(len(d) for d in self._buf.values())
@@ -145,9 +193,22 @@ class AsyncPolicy(AggregationPolicy):
         return batch
 
     def weights(self, batch: List[PendingGrad]) -> Optional[np.ndarray]:
-        if not self.damping:
-            return None
-        return staleness_weights([g.staleness for g in batch], self.damping)
+        wts = None
+        if self.damping:
+            wts = staleness_weights([g.staleness for g in batch],
+                                    self.damping)
+        scale = self.membership_scale()
+        if scale != 1.0:
+            # the runtime's apply divides by W; W/W_eff restores the mean
+            # over the surviving contributors
+            if wts is None:
+                wts = np.ones(len(batch))
+            wts = wts * scale
+        return wts
+
+    def drop_pending(self) -> List[PendingGrad]:
+        out, self._pending = self._pending, []
+        return out
 
     def pending_count(self) -> int:
         return len(self._pending)
@@ -176,10 +237,26 @@ class SSPPolicy(AggregationPolicy):
         self._stale: List[PendingGrad] = []
 
     def may_start(self, worker: int, iteration: int) -> bool:
-        return iteration <= min(self._clock.values()) + self.k
+        clocks = [self._clock[wk] for wk in self.active
+                  if wk in self._clock]
+        if not clocks:
+            clocks = [self._clock.get(worker, 0)]
+        return iteration <= min(clocks) + self.k
 
     def on_start(self, worker: int, iteration: int) -> None:
         self._clock[worker] = iteration + 1
+
+    def on_membership(self, active) -> None:
+        # a dead slot's frozen clock must not gate the survivors; a
+        # rejoiner is admitted at the surviving frontier so its stale
+        # clock does not stall the bound either
+        new = frozenset(active) - self.active
+        super().on_membership(active)
+        if new:
+            cur = max((self._clock.get(wk, 0) for wk in self.active),
+                      default=0)
+            for wk in new:
+                self._clock[wk] = max(self._clock.get(wk, 0), cur)
 
     def on_arrival(self, g: PendingGrad) -> None:
         if g.staleness > self.k:
@@ -195,13 +272,24 @@ class SSPPolicy(AggregationPolicy):
         return batch
 
     def weights(self, batch: List[PendingGrad]) -> Optional[np.ndarray]:
-        if self.staleness_comp <= 0:
-            return None
-        return staleness_weights([g.staleness for g in batch],
-                                 self.staleness_comp)
+        wts = None
+        if self.staleness_comp > 0:
+            wts = staleness_weights([g.staleness for g in batch],
+                                    self.staleness_comp)
+        scale = self.membership_scale()
+        if scale != 1.0:
+            if wts is None:
+                wts = np.ones(len(batch))
+            wts = wts * scale
+        return wts
 
     def drained_stale(self) -> List[PendingGrad]:
         out, self._stale = self._stale, []
+        return out
+
+    def drop_pending(self) -> List[PendingGrad]:
+        out = self._pending + self._stale
+        self._pending, self._stale = [], []
         return out
 
     def pending_count(self) -> int:

@@ -21,19 +21,31 @@ Execution paths:
   error-feedback/delivery machinery, and folded in by
   ``reduce_packet_stream`` with the policy's staleness-damped weights.
 
+Fault tolerance (DESIGN.md §10): a ``FaultSchedule`` (or a
+``FaultConfig`` drawn at run time) injects worker crash/join/leave and
+PS failure onto the same clock. Worker death rides the transport's
+generation-fencing protocol, so a dead node's in-flight traffic is
+provably dropped; PS failover restores the last periodic snapshot
+(optionally round-tripped through ``repro.checkpoint``) and, with
+``n_ps > 1``, rebalances shard ownership across survivors. Every fault
+path is a structural no-op when no faults are scheduled — a zero-fault
+run is record-for-record identical to the fault-unaware runtime
+(tests/test_faults.py pins this).
+
 Truncation safety: if the event loop stops on ``max_events`` mid-run the
 runtime raises instead of returning a partial history.
 """
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.config import FaultConfig, LTPConfig, NetConfig, TrainConfig
 from repro.core import packets as pk
 from repro.core.early_close import (
     AnalyticIncastModel,
@@ -45,8 +57,15 @@ from repro.net.scenarios import GatherSpec
 from repro.net.simcore import Sim
 from repro.optim import Optimizer, lr_at
 from repro.runtime import step as stp
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
 from repro.runtime.actors import PSActor, WorkerActor
 from repro.runtime.compute import ComputeModel, make_compute_model
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultSchedule,
+    ShardLedger,
+    schedule_from_config,
+)
 from repro.runtime.policies import (
     AggregationPolicy,
     AsyncPolicy,
@@ -62,14 +81,19 @@ from repro.runtime.transport import AnalyticPerWorkerNet, DESTransport
 class _BSPRound:
     """One in-flight barrier iteration (bsp only)."""
 
-    __slots__ = ("iteration", "ready", "gather", "t_first", "done")
+    __slots__ = ("iteration", "ready", "gather", "t_first", "flows_done",
+                 "members")
 
     def __init__(self, iteration: int):
         self.iteration = iteration
         self.ready: set = set()
         self.gather = None          # _DESBarrierGather under transport="des"
         self.t_first: Optional[float] = None
-        self.done = 0               # completed reliable flows (non-ltp DES)
+        self.flows_done: set = set()  # completed reliable flows (non-ltp DES)
+        # membership snapshot at round creation; crashes shrink it, and
+        # the barrier closes when members ⊆ ready (== the legacy
+        # len(ready) == W condition whenever the cluster is whole)
+        self.members: set = set()
 
 
 class ClusterRuntime:
@@ -94,6 +118,9 @@ class ClusterRuntime:
         telemetry: bool = True,
         params=None,
         opt_state=None,
+        faults=None,
+        checkpoint_every_s: float = 0.0,
+        checkpoint_dir: Optional[str] = None,
     ):
         if transport not in ("analytic", "des"):
             raise ValueError(f"unknown transport {transport!r}")
@@ -166,12 +193,37 @@ class ClusterRuntime:
         self._apply_fn = None
         self._ef_gate = None
 
+        # fault layer (runtime/faults.py): dormant unless armed.
+        # ``faults`` is a FaultSchedule (explicit timeline) or a
+        # FaultConfig (random churn drawn in run(), once the horizon is
+        # known).
+        self._fault_cfg: Optional[FaultConfig] = None
+        self.faults: Optional[FaultSchedule] = None
+        if isinstance(faults, FaultSchedule):
+            self.faults = faults
+        elif isinstance(faults, FaultConfig):
+            self._fault_cfg = faults
+            if checkpoint_every_s == 0.0:
+                checkpoint_every_s = faults.checkpoint_every_s
+        elif faults is not None:
+            raise TypeError(
+                f"faults must be a FaultSchedule or FaultConfig, "
+                f"got {type(faults)!r}")
+        self._ckpt_every = float(checkpoint_every_s)
+        self._ckpt_dir = checkpoint_dir
+        self._snap: Optional[dict] = None
+        self._ckpt_cancel = None
+        self._ps_down = False
+        self._ps_epoch = 0          # bumps at each PS failure; fences
+        #                             scheduled closures from a dead epoch
+        self._flight: Dict[tuple, int] = {}   # (worker, it) -> ps epoch
+        self.active_workers: set = set(range(n_workers))
+        self.ledger = ShardLedger(n_ps)
+
         self.ps = PSActor(self)
         self.workers: List[WorkerActor] = []
         self._blocked: set = set()
         self._bsp_round: Optional[_BSPRound] = None
-        self._inflight = 0
-        self._n_finished = 0
         self._visible = (0, self.params)
         self.version = 0                 # PS apply counter
         self.max_applied_iter = -1
@@ -195,9 +247,13 @@ class ClusterRuntime:
 
     def _publish(self, version: int, params) -> None:
         delay = broadcast_time(self.net, self.model_bytes, n_ps=self.n_ps)
+        epoch = self._ps_epoch
 
         def set_visible():
-            if version > self._visible[0]:
+            # a broadcast launched before a PS failure must not clobber
+            # the restored params (epoch fence); always 0 == 0 when no
+            # faults are scheduled
+            if epoch == self._ps_epoch and version > self._visible[0]:
                 self._visible = (version, params)
             self.wake_blocked()
 
@@ -232,6 +288,12 @@ class ClusterRuntime:
         return shaped
 
     def on_grad_ready(self, actor: WorkerActor, it: int) -> None:
+        if self._ps_down:
+            # the PS is between failure and failover: this gradient has
+            # nowhere to go — counted out, never sent
+            self.tel.record("ps_lost", self.sim.now, worker=actor.idx,
+                            iteration=it)
+            return
         if isinstance(self.policy, BSPPolicy):
             self._bsp_grad_ready(actor.idx, it)
             return
@@ -241,12 +303,17 @@ class ClusterRuntime:
             self._grad_fn = stp.build_worker_grad_fn(self.api, self.plan)
         loss, flat = self._grad_fn(actor.params_snap,
                                    self._worker_batch(actor.idx, it))
-        self._inflight += 1
         worker = actor.idx
+        # flight registry: teardown paths (worker crash, PS failure) pop
+        # entries, and the delivery callback drops itself when its entry
+        # is gone — a dead flow can never fold into the model
+        self._flight[(worker, it)] = self._ps_epoch
 
         if self.net_des is not None:
             def on_delivered(masks_ps, frac, early, worker=worker, it=it,
                              loss=loss, flat=flat):
+                if self._flight.pop((worker, it), None) is None:
+                    return
                 stream = np.concatenate(list(masks_ps))
                 row = stp.tile_mask_onto_plan(self.plan, stream)
                 if self.tel.enabled:
@@ -265,6 +332,8 @@ class ClusterRuntime:
         else:
             def on_close(frac, early, worker=worker, it=it, loss=loss,
                          flat=flat):
+                if self._flight.pop((worker, it), None) is None:
+                    return
                 if self.protocol == "ltp":
                     row = (self._amask_rng.random(self.plan.n_packets)
                            < frac).astype(np.float32)
@@ -281,7 +350,6 @@ class ClusterRuntime:
 
     def _deliver(self, worker: int, it: int, loss, flat, mask_row: np.ndarray,
                  frac: float) -> None:
-        self._inflight -= 1
         g = PendingGrad(
             worker=worker, iteration=it, t_ready=self.sim.now,
             staleness=max(0, self.max_applied_iter - it),
@@ -290,7 +358,24 @@ class ClusterRuntime:
         self.ps.on_arrival(g)
 
     def on_worker_finished(self, idx: int) -> None:
-        self._n_finished += 1
+        self.maybe_finish()
+
+    def on_worker_dead(self, idx: int, graceful: bool = False) -> None:
+        """Remove ``idx`` from the membership. A crash (graceful=False)
+        additionally tears down its transport state and fences its
+        in-flight gradients; a graceful leave lets them deliver."""
+        self.active_workers.discard(idx)
+        if not graceful:
+            for key in [k for k in self._flight if k[0] == idx]:
+                del self._flight[key]
+                self.tel.record("flow_torn", self.sim.now, worker=idx,
+                                iteration=key[1])
+            if self.net_des is not None:
+                self.net_des.teardown_worker(idx)
+        self.policy.on_membership(self.active_workers)
+        if not graceful and isinstance(self.policy, BSPPolicy):
+            self._bsp_round_member_lost(idx)
+        self.wake_blocked()
         self.maybe_finish()
 
     # ------------------------------------------------------------------
@@ -301,28 +386,79 @@ class ClusterRuntime:
         if rnd is None or rnd.iteration != it:
             rnd = self._bsp_round = _BSPRound(it)
             rnd.t_first = self.sim.now
+            rnd.members = set(self.active_workers)
             if self.net_des is not None and self.protocol == "ltp":
-                rnd.gather = self.net_des.start_gather(self._bsp_des_closed)
+                rnd.gather = self.net_des.start_gather(
+                    self._bsp_des_closed,
+                    members=(None if len(rnd.members) == self.w
+                             else rnd.members))
         rnd.ready.add(worker)
         if self.net_des is None:
-            if len(rnd.ready) == self.w:
+            if rnd.members and rnd.members <= rnd.ready:
                 self._bsp_analytic_close(rnd)
         elif self.protocol == "ltp":
             rnd.gather.add_worker(worker)
         else:
-            # reliable protocols: W independent flows; the barrier closes
-            # when the last byte of the last flow lands
-            def on_flow(masks_ps, frac, early, rnd=rnd):
-                rnd.done += 1
-                if rnd.done == self.w:
-                    masks = np.ones((self.w, self.plan.n_packets),
-                                    np.float32)
-                    close = self.sim.now - rnd.t_first
-                    bst = close + broadcast_time(
-                        self.net, self.model_bytes, n_ps=self.n_ps)
-                    self._bsp_commit(rnd, masks, np.ones(self.w), bst)
+            # reliable protocols: independent flows; the barrier closes
+            # when the last byte of the last member's flow lands
+            def on_flow(masks_ps, frac, early, rnd=rnd, worker=worker):
+                rnd.flows_done.add(worker)
+                self._bsp_reliable_check(rnd)
 
             self.net_des.send(worker, on_flow)
+
+    def _bsp_reliable_check(self, rnd: _BSPRound) -> None:
+        if rnd is not self._bsp_round or not rnd.members \
+                or not rnd.members <= rnd.flows_done:
+            return
+        masks = np.ones((self.w, self.plan.n_packets), np.float32)
+        close = self.sim.now - rnd.t_first
+        bst = close + broadcast_time(self.net, self.model_bytes,
+                                     n_ps=self.n_ps)
+        if len(rnd.ready & rnd.members) == self.w:
+            self._bsp_commit(rnd, masks, np.ones(self.w), bst)
+        else:
+            self._bsp_commit_degraded(rnd, masks, np.ones(self.w), bst)
+
+    def _bsp_round_member_lost(self, worker: int) -> None:
+        """A crash removed ``worker`` mid-round: shrink the barrier to
+        the survivors and re-check whether it can now close."""
+        rnd = self._bsp_round
+        if rnd is None or worker not in rnd.members:
+            return
+        rnd.members.discard(worker)
+        if worker in rnd.ready:
+            # its gradient reached the round but will never complete the
+            # transport leg — the flow is torn, not applied (and leaves
+            # ``ready`` so a later PS failure cannot double-count it)
+            rnd.ready.discard(worker)
+            self.tel.record("flow_torn", self.sim.now, worker=worker,
+                            iteration=rnd.iteration)
+        if rnd.gather is not None:
+            # the gather's own close rule re-evaluates over the
+            # surviving flows (may fire _bsp_des_closed synchronously)
+            rnd.gather.abandon_worker(worker)
+            return
+        if not rnd.members:
+            self._bsp_round_dissolved()
+            return
+        if self.net_des is None:
+            if rnd.members <= rnd.ready:
+                self._bsp_analytic_close(rnd)
+        else:
+            self._bsp_reliable_check(rnd)
+
+    def _bsp_round_dissolved(self) -> None:
+        """Every participant of the in-flight round crashed before it
+        could commit. Survivor-less rounds leave joiners parked at
+        iteration+1; re-anchor every live idle worker at the committed
+        frontier so the barrier restarts."""
+        self._bsp_round = None
+        for wk in self.workers:
+            if wk.state != "dead" and not wk.busy and not wk.finished:
+                wk.reset_to(self.step_idx)
+                wk._try_begin()
+        self.maybe_finish()
 
     def _bsp_analytic_close(self, rnd: _BSPRound) -> None:
         """All grads ready: sample the transport models and the Early
@@ -353,11 +489,21 @@ class ClusterRuntime:
         # the gather is anchored at the LAST grad-ready (= now, the event
         # that completed the barrier) — under heterogeneous compute the
         # straggler's lateness must not absorb the transport cost
-        self._bsp_commit(rnd, masks, frac, bst, t_anchor=self.sim.now)
+        if len(rnd.ready & rnd.members) == self.w:
+            self._bsp_commit(rnd, masks, frac, bst, t_anchor=self.sim.now)
+        else:
+            self._bsp_commit_degraded(rnd, masks, frac, bst,
+                                      t_anchor=self.sim.now)
 
     def _bsp_des_closed(self, sharded) -> None:
         """All DES shards closed: real delivery masks -> fused step."""
         rnd = self._bsp_round
+        if rnd is None:
+            return
+        if not (rnd.ready & rnd.members):
+            # every participant crashed before the gather closed
+            self._bsp_round_dissolved()
+            return
         per_shard = sharded.delivery_masks()        # (n_ps, W, n)
         if self.tel.enabled:
             self.tel.record(
@@ -375,7 +521,10 @@ class ClusterRuntime:
         close = self.sim.now - rnd.t_first
         bst = close + broadcast_time(self.net, self.model_bytes,
                                      n_ps=self.n_ps)
-        self._bsp_commit(rnd, masks, frac, bst)
+        if len(rnd.ready & rnd.members) == self.w:
+            self._bsp_commit(rnd, masks, frac, bst)
+        else:
+            self._bsp_commit_degraded(rnd, masks, frac, bst)
 
     def _bsp_commit(self, rnd: _BSPRound, masks: np.ndarray,
                     frac: np.ndarray, bst: float,
@@ -397,8 +546,11 @@ class ClusterRuntime:
         # DES: the round's first send, whose ``bst`` already spans the
         # in-flight gather).
         t_commit = (rnd.t_first if t_anchor is None else t_anchor) + bst
+        epoch = self._ps_epoch
 
         def commit(loss=loss, realized=realized):
+            if epoch != self._ps_epoch:
+                return   # PS failed between close and commit; rolled back
             self.version += 1
             self.max_applied_iter = it
             self._visible = (self.version, self.params)
@@ -430,6 +582,105 @@ class ClusterRuntime:
                 if "eval" in rec:
                     msg += f" eval {rec['eval']:.4f}"
                 print(msg, flush=True)
+            self.step_idx = it + 1
+            self._bsp_round = None
+            self.policy.on_applied([])
+            self.wake_blocked()
+            self.maybe_finish()
+
+        self.sim.at(t_commit, commit)
+
+    def _bsp_commit_degraded(self, rnd: _BSPRound, masks: np.ndarray,
+                             frac, bst: float,
+                             t_anchor: Optional[float] = None) -> None:
+        """Partial-membership barrier commit. The fused step is shaped
+        over all W batch shards, so a degraded round instead computes
+        per-survivor gradients (same grad fn as the async path) and
+        folds them with weight W/n_survivors — composed with the apply
+        fn's 1/W reduction that is exactly the mean over survivors."""
+        it = rnd.iteration
+        survivors = sorted(rnd.ready & rnd.members)
+        if not survivors:
+            self._bsp_round_dissolved()
+            return
+        frac_arr = np.asarray(frac, float)
+        if frac_arr.ndim == 0:
+            frac_arr = np.full(self.w, float(frac_arr))
+        t_commit = (rnd.t_first if t_anchor is None else t_anchor) + bst
+        epoch = self._ps_epoch
+
+        def commit():
+            if epoch != self._ps_epoch:
+                return
+            if self._grad_fn is None:
+                self._grad_fn = stp.build_worker_grad_fn(self.api, self.plan)
+            if self._apply_fn is None:
+                self._apply_fn = stp.build_apply_fn(
+                    self.api, self.opt, self.ltp, self.plan, self.w,
+                    premasked=self.ltp.error_feedback)
+                if self.ltp.error_feedback:
+                    self._ef_gate = stp.build_ef_gate_fn(self.ltp)
+            n, p = self.plan.n_packets, self.plan.packet_floats
+            weights = np.zeros(self.w, np.float32)
+            rows_flat, rows_mask, losses = [], [], []
+            scale = self.w / len(survivors)
+            for i, wkr in enumerate(survivors):
+                snap = self.workers[wkr].params_snap
+                loss, flat = self._grad_fn(
+                    self.params if snap is None else snap,
+                    self._worker_batch(wkr, it))
+                mask = jnp.asarray(masks[wkr])
+                if self._ef_gate is not None:
+                    flat, new_res = self._ef_gate(
+                        flat, self.residual[wkr], mask)
+                    self.residual = self.residual.at[wkr].set(new_res)
+                rows_flat.append(flat)
+                rows_mask.append(mask)
+                weights[i] = scale
+                losses.append(loss)
+            pad = self.w - len(survivors)
+            if pad:
+                rows_flat.append(jnp.zeros((pad, n, p), jnp.float32))
+                rows_mask.append(jnp.zeros((pad, n), jnp.float32))
+                stacked = jnp.concatenate(
+                    [jnp.stack(rows_flat[:-1]), rows_flat[-1]])
+                mrows = jnp.concatenate(
+                    [jnp.stack(rows_mask[:-1]), rows_mask[-1]])
+            else:
+                stacked = jnp.stack(rows_flat)
+                mrows = jnp.stack(rows_mask)
+            lr = lr_at(self.train_cfg, it, self._epoch_steps)
+            fr = float(np.mean(frac_arr[survivors]))
+            self.params, self.opt_state = self._apply_fn(
+                self.params, self.opt_state, stacked, mrows,
+                jnp.asarray(weights), jnp.asarray(fr, jnp.float32),
+                jnp.asarray(lr, jnp.float32))
+            loss = jnp.mean(jnp.stack(losses))
+            self.version += 1
+            self.max_applied_iter = it
+            self._visible = (self.version, self.params)
+            self.sim_time = self.sim.now
+            rec = {
+                "step": it,
+                "loss": loss,
+                "bst": bst,
+                "delivered": fr,
+                "sim_time": self.sim_time,
+                "n_grads": len(survivors),
+            }
+            self.tel.record("apply", self.sim.now, step=it,
+                            n_grads=len(survivors), staleness_max=0,
+                            staleness_mean=0.0, loss=loss)
+            if self._epoch_steps and (it + 1) % self._epoch_steps == 0:
+                self.controller.new_epoch()
+            if self._eval_fn is not None and self._eval_every and \
+                    (it + 1) % self._eval_every == 0:
+                rec["eval"] = float(self._eval_fn(self.params))
+            self.history.append(rec)
+            if self._log_every and it % self._log_every == 0:
+                print(f"step {it:5d} loss {float(rec['loss']):.4f} "
+                      f"bst {bst*1e3:6.1f}ms degraded "
+                      f"n_grads {len(survivors)}/{self.w}", flush=True)
             self.step_idx = it + 1
             self._bsp_round = None
             self.policy.on_applied([])
@@ -509,13 +760,186 @@ class ClusterRuntime:
         self.wake_blocked()
 
     # ------------------------------------------------------------------
+    # fault injection (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def on_fault(self, ev: FaultEvent) -> None:
+        """FaultSchedule dispatch target; one call per armed event."""
+        if self._stopped:
+            return
+        self.tel.record("fault", self.sim.now, fault=ev.kind,
+                        target=ev.target)
+        if ev.kind == "worker_crash":
+            self._fault_worker_crash(ev.target % self.w)
+        elif ev.kind == "worker_leave":
+            self._fault_worker_leave(ev.target % self.w)
+        elif ev.kind == "worker_join":
+            self._fault_worker_join(ev.target % self.w)
+        elif ev.kind == "ps_fail":
+            self._fault_ps_fail(ev.target % self.n_ps, ev.recover_s)
+        elif ev.kind == "ps_recover":
+            self._fault_ps_recover(ev.target % self.n_ps)
+
+    def _fault_worker_crash(self, idx: int) -> None:
+        wk = self.workers[idx]
+        if wk.state == "dead":
+            return
+        wk.crash()
+        self.on_worker_dead(idx, graceful=False)
+
+    def _fault_worker_leave(self, idx: int) -> None:
+        wk = self.workers[idx]
+        if wk.state == "dead":
+            return
+        wk.retire()
+        if wk.state == "dead":
+            # it was idle/blocked: no iteration to drain
+            self.on_worker_dead(idx, graceful=True)
+
+    def _fault_worker_join(self, idx: int) -> None:
+        wk = self.workers[idx]
+        if wk.state != "dead":
+            return   # slot already alive; elasticity is over fixed slots
+        self.active_workers.add(idx)
+        self.policy.on_membership(self.active_workers)
+        if isinstance(self.policy, BSPPolicy):
+            # rejoin at the committed frontier; if a round is in flight
+            # the joiner sits it out (its gather flows were abandoned at
+            # round start and cannot re-enter a running barrier)
+            at_it = self.policy.committed
+            if self._bsp_round is not None:
+                at_it = self._bsp_round.iteration + 1
+        else:
+            at_it = max(wk.it, self.max_applied_iter + 1)
+        wk.rejoin(at_it)
+
+    def _fault_ps_fail(self, ps: int, recover_s: float) -> None:
+        if self._ps_down:
+            return
+        self._ps_down = True
+        self._ps_epoch += 1   # fences queued publishes/commits/callbacks
+        now = self.sim.now
+        # every in-flight gradient loses its destination
+        for (wkr, it) in list(self._flight):
+            self.tel.record("ps_lost", now, worker=wkr, iteration=it)
+        self._flight.clear()
+        if self.net_des is not None:
+            self.net_des.teardown_all()
+        for g in self.policy.drop_pending():
+            self.tel.record("ps_lost", now, worker=g.worker,
+                            iteration=g.iteration)
+        rnd = self._bsp_round
+        if rnd is not None:
+            for wkr in rnd.ready:
+                self.tel.record("ps_lost", now, worker=wkr,
+                                iteration=rnd.iteration)
+            self._bsp_round = None
+        self.ledger.fail(ps)
+        self.sim.after(max(recover_s, 0.0), lambda: self._ps_failover(ps))
+
+    def _ps_failover(self, ps: int) -> None:
+        """Bring the PS back from the last snapshot: global rollback of
+        model/optimizer/history, shard re-homing, and a barrier restart
+        for bsp (surviving workers re-run from the committed frontier)."""
+        if not self._ps_down or self._stopped:
+            return
+        snap = self._snap
+        if snap is None:
+            raise RuntimeError(
+                "PS failed with no snapshot taken — arm the checkpoint "
+                "grid (checkpoint_every_s / FaultConfig.checkpoint_every_s)"
+                " when scheduling ps_fail events")
+        params, opt_state = snap["params"], snap["opt_state"]
+        if self._ckpt_dir is not None:
+            # exercise the real durability path: restore the archive the
+            # snapshot grid wrote, not the in-memory reference
+            tree, _ = restore_checkpoint(
+                self._ckpt_path(), {"params": params, "opt_state": opt_state})
+            params, opt_state = tree["params"], tree["opt_state"]
+        self.params, self.opt_state = params, opt_state
+        self.residual = snap["residual"]
+        self.version = snap["version"]
+        self.max_applied_iter = snap["max_applied_iter"]
+        self.step_idx = snap["step_idx"]
+        del self.history[snap["n_hist"]:]
+        self.policy.rollback(self.step_idx)
+        if self.net_des is not None and self.n_ps > 1:
+            moves = list(self.ledger.owner)
+            self.net_des.set_shard_owners(moves)
+            self.tel.record("rebalance", self.sim.now, owner=tuple(moves))
+        self._ps_down = False
+        self._visible = (self.version, self.params)
+        self.tel.record("ps_failover", self.sim.now, ps=ps,
+                        step=self.step_idx, n_hist=snap["n_hist"])
+        if isinstance(self.policy, BSPPolicy):
+            for wk in self.workers:
+                if wk.state == "draining":
+                    # its drain iteration was cancelled with the round;
+                    # complete the leave instead of wedging the barrier
+                    wk.state = "dead"
+                    if wk._compute_eid is not None:
+                        self.sim.cancel(wk._compute_eid)
+                        wk._compute_eid = None
+                    wk.busy = False
+                    self.tel.record("lifecycle", self.sim.now,
+                                    worker=wk.idx, state="dead",
+                                    iteration=wk.it, reason="leave")
+                    self.on_worker_dead(wk.idx, graceful=True)
+            for wk in self.workers:
+                if wk.state != "dead":
+                    wk.reset_to(self.step_idx)
+            for wk in self.workers:
+                if wk.state != "dead":
+                    wk._try_begin()
+        else:
+            self.wake_blocked()
+        self.maybe_finish()
+
+    def _fault_ps_recover(self, ps: int) -> None:
+        moves = self.ledger.recover(ps)
+        if moves and self.net_des is not None and self.n_ps > 1:
+            self.net_des.set_shard_owners(list(self.ledger.owner))
+            self.tel.record("rebalance", self.sim.now,
+                            owner=tuple(self.ledger.owner))
+
+    def _ckpt_path(self) -> str:
+        return os.path.join(self._ckpt_dir, "runtime_ckpt")
+
+    def _take_snapshot(self) -> None:
+        """Periodic async snapshot on the Sim.every grid. In-memory by
+        default (jax trees are immutable, so a reference is a copy);
+        with ``checkpoint_dir`` the params/opt tree also round-trips
+        through repro.checkpoint's npz archive."""
+        self._snap = {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "residual": self.residual,
+            "version": self.version,
+            "max_applied_iter": self.max_applied_iter,
+            "step_idx": self.step_idx,
+            "n_hist": len(self.history),
+            "t": self.sim.now,
+        }
+        if self._ckpt_dir is not None:
+            save_checkpoint(
+                self._ckpt_path(),
+                {"params": self.params, "opt_state": self.opt_state},
+                step=self.step_idx)
+        self.tel.record("checkpoint", self.sim.now, step=self.step_idx,
+                        n_hist=len(self.history))
+
+    # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
     def maybe_finish(self) -> None:
-        if self._stopped or self._n_finished < self.w:
+        if self._stopped or not self.workers:
             return
-        if self._inflight or self._bsp_round is not None:
+        if not all(wk.finished or wk.state == "dead"
+                   for wk in self.workers):
             return
+        if self._flight or self._bsp_round is not None:
+            return
+        if self._ps_down:
+            return   # failover is scheduled; it restarts or finishes us
         if self.policy.pending_count():
             return
         self._stopped = True
@@ -523,6 +947,8 @@ class ClusterRuntime:
             self.net_des.stop()
         if self._sampler_cancel is not None:
             self._sampler_cancel()
+        if self._ckpt_cancel is not None:
+            self._ckpt_cancel()
 
     _sampler_cancel = None
 
@@ -536,6 +962,19 @@ class ClusterRuntime:
         self._eval_every = eval_every
         self._log_every = log_every
         self.workers = [WorkerActor(self, i) for i in range(self.w)]
+        if self._fault_cfg is not None and self.faults is None:
+            # horizon estimate for the random churn draw: the schedule
+            # only needs a rough upper bound on run length
+            base = float(getattr(self.compute, "base", 0.05))
+            t_end = max(self.steps * base * 3.0, 1.0)
+            self.faults = schedule_from_config(self._fault_cfg, self.w, t_end)
+        if self.faults is not None or self._ckpt_every > 0:
+            self._take_snapshot()    # t=0 anchor: failover always has one
+        if self._ckpt_every > 0:
+            self._ckpt_cancel = self.sim.every(self._ckpt_every,
+                                               self._take_snapshot)
+        if self.faults is not None:
+            self.faults.arm(self.sim, self.on_fault)
         if self.net_des is not None and self.tel.enabled:
             # trunk-queue sampler: an actor hook on the shared clock
             interval = max(self.net.rtprop_ms * 1e-3, 1e-3)
@@ -549,15 +988,23 @@ class ClusterRuntime:
             wk.start()
         self.sim.run(max_events=max_events)
         if self.sim.truncated:
+            n_done = sum(1 for wk in self.workers
+                         if wk.finished or wk.state == "dead")
             raise RuntimeError(
                 f"co-simulation truncated at max_events={max_events} "
-                f"(t={self.sim.now:.3f}s, {self._n_finished}/{self.w} "
+                f"(t={self.sim.now:.3f}s, {n_done}/{self.w} "
                 f"workers finished) — raise max_events or shrink the "
                 f"scenario; a truncated run must not pass as converged")
+        if not self._stopped and self._ps_down:
+            raise RuntimeError(
+                "event loop drained while the PS was down — the failover "
+                "event was lost; a wedged run must not pass as converged")
         if self.net_des is not None:
             self.net_des.stop()
         if self._sampler_cancel is not None:
             self._sampler_cancel()
+        if self._ckpt_cancel is not None:
+            self._ckpt_cancel()
         self._finalize_history()
         return self.history
 

@@ -18,6 +18,21 @@ plus per-kind payload:
   queue           depth [, net_depth]          (PS pending / trunk pkts)
   masks           [worker,] iteration, digest  (DES delivery-mask hash)
 
+Fault-layer kinds (DESIGN.md §10; absent in a zero-fault run):
+
+  fault           fault, target                (injected FaultEvent kind)
+  lifecycle       worker, state, iteration [, reason]
+  flow_torn       worker, iteration   (crash fenced an in-flight grad)
+  ps_lost         worker, iteration   (PS downtime swallowed a grad)
+  ps_failover     ps, step, n_hist    (snapshot restored, history cut)
+  checkpoint      step, n_hist        (periodic snapshot taken)
+  rebalance       owner               (shard ownership re-homed)
+
+Conservation law the chaos suite asserts: every grad_ready is applied,
+stale-dropped, torn, or lost —
+``n(grad_ready) == sum(apply.n_grads) + n(stale_drop) + n(flow_torn)
++ n(ps_lost)``.
+
 Sampling discipline (DESIGN.md §9): per-event hooks record O(1)
 payloads only; anything that walks topology state (trunk queue depths)
 is sampled on the runtime's ``Sim.every`` wall grid, never per event.
@@ -86,4 +101,11 @@ class Telemetry:
         if closes:
             out["early_close_mean_delivered"] = round(
                 float(np.mean([e["delivered"] for e in closes])), 4)
+        faults = self.of("fault")
+        if faults:
+            out["n_faults"] = len(faults)
+            out["n_flow_torn"] = len(self.of("flow_torn"))
+            out["n_ps_lost"] = len(self.of("ps_lost"))
+            out["n_failovers"] = len(self.of("ps_failover"))
+            out["n_checkpoints"] = len(self.of("checkpoint"))
         return out

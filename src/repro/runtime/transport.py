@@ -151,6 +151,7 @@ class _DESFlowSet:
 
     def _build_flow(self, p: int) -> None:
         tr, w = self.tr, self.worker
+        path = _fwd_path(tr.topo, tr.spec, tr.owner[p], w)
         back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate, 10_000,
                     tr.rng)
         if tr.protocol == "ltp":
@@ -170,7 +171,7 @@ class _DESFlowSet:
             # (a reset sender must not be killed by its past round)
             recv.on_stale = (lambda flow, g, p=p, back=back:
                              self._stop_stale(p, g, back))
-            s = snd.LTPSender(tr.sim, _fwd_path(tr.topo, tr.spec, p, w),
+            s = snd.LTPSender(tr.sim, path,
                               recv.on_data, tr.n, critical=tr.crit, flow=w,
                               rng=tr.rng, train_len=tr.coalesce)
             recv.attach_ack(w, lambda pkt, s=s, back=back:
@@ -184,8 +185,7 @@ class _DESFlowSet:
             def on_done(s, p=p):
                 self._shard_done(p, self._ones, False)
 
-            s = snd.make_sender(tr.protocol, tr.sim,
-                                _fwd_path(tr.topo, tr.spec, p, w), None,
+            s = snd.make_sender(tr.protocol, tr.sim, path, None,
                                 tr.n, flow=w, rng=tr.rng, on_done=on_done,
                                 train_len=tr.coalesce)
             recv = snd.TcpReceiver(tr.sim, lambda pkt, s=s, back=back:
@@ -222,8 +222,29 @@ class _DESFlowSet:
             self.senders[p].reset(gen=self.gen)
             self.senders[p].start()
 
+    def teardown(self) -> None:
+        """Hard-stop this bundle mid-round (node/PS death, DESIGN.md
+        §10): the flow generation bumps so every packet still in flight
+        is fenced out as stale, the pooled senders go silent, receivers
+        deactivate, and the set returns to the free list. The runtime
+        accounts the dropped gradient; no callback fires."""
+        self.gen += 1
+        self.cb = None
+        for p in range(self.tr.n_ps):
+            self.senders[p].kill()
+            self.senders[p].gen = self.gen
+            if self.tr.protocol == "ltp":
+                self.recvs[p].deactivate(gen=self.gen)
+            else:
+                self.recvs[p].reset(gen=self.gen)
+            self.backs[p].recycle()
+        self.masks = [None] * self.tr.n_ps
+        self.closed = 0
+        self.early = False
+        self.idle = True
+
     def _shard_done(self, p: int, mask: np.ndarray, early: bool) -> None:
-        if self.masks[p] is not None:
+        if self.cb is None or self.masks[p] is not None:
             return
         self.masks[p] = mask
         self.early = self.early or early
@@ -273,13 +294,43 @@ class _DESBarrierGather:
             shard.on_stale = (lambda flow, g, p=p:
                               self._stop_stale(p, flow, g))
 
-    def begin(self, cb: Callable[[ShardedGatherReceiver], None]) -> None:
-        """Arm the barrier for a fresh iteration."""
+    def begin(self, cb: Callable[[ShardedGatherReceiver], None],
+              members=None) -> None:
+        """Arm the barrier for a fresh iteration. ``members`` (optional)
+        is the active worker set: flows outside it are abandoned up
+        front so the close rule only waits on live nodes."""
         self.gen += 1
         self.cb = cb
         self.t0 = self.tr.sim.now
         self._n_closed = 0
         self.sharded.reset(gen=self.gen)
+        if members is not None and len(members) < self.tr.w:
+            for w in range(self.tr.w):
+                if w not in members:
+                    self.sharded.abandon_worker(w)
+
+    def abandon_worker(self, worker: int) -> None:
+        """Mid-round node death: kill the worker's pooled senders, fence
+        their generation, and drop the flows from every shard's close
+        rule (which may complete the barrier)."""
+        for p in range(self.tr.n_ps):
+            s = self._senders.get((p, worker))
+            if s is not None:
+                s.kill()
+                s.gen = self.gen + 1   # fence: future stops can't match
+                self._backs[(p, worker)].recycle()
+        self.sharded.abandon_worker(worker)
+
+    def abort(self) -> None:
+        """PS death mid-round: silence everything; no callback fires.
+        The next ``begin`` revives the pooled graph."""
+        self.cb = None
+        for s in self._senders.values():
+            s.kill()
+        self.sharded.deactivate(gen=self.gen + 1)
+        self.gen += 1
+        for back in self._backs.values():
+            back.recycle()
 
     def _stop_stale(self, p: int, flow: int, g) -> None:
         s = self._senders.get((p, flow))
@@ -287,6 +338,8 @@ class _DESBarrierGather:
             _send_stop_pkt(self.tr, self._backs[(p, flow)], s)
 
     def _shard_closed(self, shard: PSGatherReceiver) -> None:
+        if self.cb is None:
+            return
         self.tr.on_early_close(shard.ps_id, self.tr.sim.now,
                                float(shard.agg_pct), shard.all_full)
         self._n_closed += 1
@@ -306,7 +359,7 @@ class _DESBarrierGather:
                 back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate,
                             10_000, tr.rng)
                 s = snd.LTPSender(
-                    tr.sim, _fwd_path(tr.topo, tr.spec, p, worker),
+                    tr.sim, _fwd_path(tr.topo, tr.spec, tr.owner[p], worker),
                     shard.on_data, tr.n, critical=tr.crit,
                     flow=worker, rng=tr.rng, train_len=tr.coalesce)
                 if tr.coalesce > 1:
@@ -371,6 +424,9 @@ class DESTransport:
             self.coalesce = max(1, int(coalesce))
         self.topo, self.sources = _build_topology(
             sim, net, n_workers, self.spec, self.rng, self.coalesce)
+        # shard -> owning-PS route map (identity until a PS failover
+        # rebalance re-homes a dead PS's shards, DESIGN.md §10)
+        self.owner: List[int] = list(range(self.n_ps))
         crit = np.zeros(self.n, bool)
         ncrit = max(2, int(0.01 * self.n))
         crit[: ncrit // 2] = True
@@ -402,6 +458,35 @@ class DESTransport:
         for src in self.sources:
             src.stop()
 
+    # -- fault teardown (DESIGN.md §10) -------------------------------------
+    def teardown_worker(self, worker: int) -> None:
+        """Node death: fence + silence the worker's in-flight flow sets.
+        (bsp barrier flows are torn through the gather's
+        ``abandon_worker`` — the runtime owns that round state.)"""
+        for fs in self._flowsets.get(worker, []):
+            if not fs.idle:
+                fs.teardown()
+
+    def teardown_all(self) -> None:
+        """PS death: fence + silence every in-flight flow graph."""
+        for pool in self._flowsets.values():
+            for fs in pool:
+                if not fs.idle:
+                    fs.teardown()
+        if self._barrier is not None:
+            self._barrier.abort()
+
+    def set_shard_owners(self, owner: List[int]) -> None:
+        """Re-home shard routes after a PS failover rebalance. The
+        pooled flow graphs were built against the old routes, so the
+        pools are dropped and rebuilt lazily on the next send — a rare,
+        bounded cost (faults, not steady state)."""
+        if list(owner) == self.owner:
+            return
+        self.owner = list(owner)
+        self._flowsets = {}
+        self._barrier = None
+
     def on_early_close(self, shard: int, t: float, delivered: float,
                        full: bool) -> None:
         if self._on_early_close is not None and not full:
@@ -419,10 +504,10 @@ class DESTransport:
 
     # -- bsp: one barrier gather per iteration ------------------------------
     def start_gather(self, cb: Callable[[ShardedGatherReceiver], None],
-                     ) -> _DESBarrierGather:
+                     members=None) -> _DESBarrierGather:
         if self._barrier is None:
             self._barrier = _DESBarrierGather(self)
-        self._barrier.begin(cb)
+        self._barrier.begin(cb, members=members)
         return self._barrier
 
     def queue_depth_pkts(self) -> float:

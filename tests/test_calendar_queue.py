@@ -297,6 +297,34 @@ def test_stale_generation_restops_orphaned_sender(api):
     assert not s2.stopped
 
 
+def test_teardown_fences_pooled_flow_then_pool_reuses_it():
+    """Node-death fencing on the pooled fast path (DESIGN.md §10): a
+    torn flow set's callback must never fire — its receivers bump a
+    generation, so every in-flight packet is provably dropped as stale
+    — and the SAME pooled object must serve the next send cleanly."""
+    from repro.runtime.transport import DESTransport
+
+    sim = Sim()
+    tr = DESTransport(sim, NET, LTPConfig(), "ltp", 2, 4096.0, seed=0)
+    fired = []
+    tr.send(0, lambda masks, frac, early: fired.append("torn"))
+    fs = tr._flowsets[0][0]
+    gen0 = fs.gen
+    assert not fs.idle
+    sim.run(until=sim.now + 1e-4)       # mid-flight: packets on the wire
+    tr.teardown_worker(0)
+    assert fs.idle                      # returned to the pool, silenced
+    assert fs.gen == gen0 + 1           # generation fence bumped
+    sim.run(until=sim.now + 0.5)        # drain the torn round's packets
+    assert fired == []                  # dead flow never delivered
+    # the pool must hand back the same object, good as new
+    tr.send(0, lambda masks, frac, early: fired.append("clean"))
+    assert tr._flowsets[0][0] is fs and not fs.idle
+    sim.run(until=sim.now + 0.5)
+    tr.stop()
+    assert fired == ["clean"]           # reused flow delivers exactly once
+
+
 def test_cancelled_ghost_beyond_until_pending_parity():
     """A cancelled event beyond ``until`` must be discarded by both
     engines (the heap drops a cancelled head regardless of until), so

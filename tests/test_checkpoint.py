@@ -1,0 +1,115 @@
+"""repro.checkpoint round-trip contract: pytree <-> npz with slash
+paths, step restoration, and loud failures on archive/`like` skew — a
+silent partial restore is how PS failover would corrupt a model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import build
+from repro.optim import make_optimizer
+from repro.config import TrainConfig
+
+
+def _tree():
+    return {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                   "b": np.zeros(3, dtype=np.float32)},
+        "opt": {"mu": {"w": np.full((2, 3), 0.5, np.float32)},
+                "count": np.asarray(7)},
+    }
+
+
+def test_round_trip_identity(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, _tree(), step=42)
+    # `like` carries structure and dtypes only; its values must not leak
+    zeros = {
+        "params": {"w": np.zeros((2, 3), np.float32),
+                   "b": np.ones(3, np.float32)},
+        "opt": {"mu": {"w": np.zeros((2, 3), np.float32)},
+                "count": np.asarray(0)},
+    }
+    tree, step = restore_checkpoint(path, zeros)
+    assert step == 42
+    ref = _tree()
+    np.testing.assert_array_equal(tree["params"]["w"], ref["params"]["w"])
+    np.testing.assert_array_equal(tree["params"]["b"], ref["params"]["b"])
+    np.testing.assert_array_equal(tree["opt"]["mu"]["w"],
+                                  ref["opt"]["mu"]["w"])
+    assert int(tree["opt"]["count"]) == 7
+
+
+def test_round_trip_real_model_and_opt_state(tmp_path):
+    import jax
+    cfg = get_config("papernet").replace(d_model=8, n_layers=2)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = make_optimizer(TrainConfig(batch=8, lr=0.1, steps=1))
+    opt_state = opt.init(params)
+    path = str(tmp_path / "model_ck")
+    save_checkpoint(path, {"params": params, "opt_state": opt_state},
+                    step=3)
+    like = {"params": params, "opt_state": opt_state}
+    tree, step = restore_checkpoint(path, like)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(tree["params"]),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+    for a, b in zip(jax.tree_util.tree_leaves(tree["opt_state"]),
+                    jax.tree_util.tree_leaves(opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_missing_paths_raise_keyerror_with_names(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"params": {"w": np.ones(2, np.float32)}})
+    like = {"params": {"w": np.zeros(2, np.float32),
+                       "b": np.zeros(3, np.float32)},
+            "opt": np.zeros(1, np.float32)}
+    with pytest.raises(KeyError, match=r"missing 2 path"):
+        restore_checkpoint(path, like)
+    try:
+        restore_checkpoint(path, like)
+    except KeyError as e:
+        msg = str(e)
+        assert "params/b" in msg and "opt" in msg
+
+
+def test_extra_paths_strict_raises_lenient_passes(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(2, np.float32),
+                           "legacy": np.zeros(4, np.float32)}, step=9)
+    like = {"w": np.zeros(2, np.float32)}
+    with pytest.raises(ValueError, match=r"legacy.*strict=False"):
+        restore_checkpoint(path, like)
+    tree, step = restore_checkpoint(path, like, strict=False)
+    assert step == 9
+    np.testing.assert_array_equal(tree["w"], np.ones(2, np.float32))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones((2, 3), np.float32)})
+    with pytest.raises(ValueError, match=r"'w' has shape \(2, 3\)"):
+        restore_checkpoint(path, {"w": np.zeros((3, 2), np.float32)})
+
+
+def test_dtype_follows_like(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(4, np.float64)})
+    tree, _ = restore_checkpoint(path, {"w": jnp.zeros(4, jnp.float32)})
+    assert tree["w"].dtype == jnp.float32
+
+
+def test_npz_suffix_is_optional(tmp_path):
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, {"w": np.ones(2, np.float32)}, step=1)
+    assert (tmp_path / "ck.npz").exists()
+    t1, s1 = restore_checkpoint(path, {"w": np.zeros(2, np.float32)})
+    t2, s2 = restore_checkpoint(path + ".npz",
+                                {"w": np.zeros(2, np.float32)})
+    assert s1 == s2 == 1
+    np.testing.assert_array_equal(t1["w"], t2["w"])

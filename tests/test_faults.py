@@ -1,0 +1,418 @@
+"""Elastic fault-injected clusters (DESIGN.md §10): zero-fault parity
+with the fault-unaware runtime, chaos/soak invariants across
+{bsp, async, ssp} x {analytic, DES}, worker churn, PS failover from
+periodic snapshots, and generation fencing of dead nodes' traffic.
+
+Invariants the chaos harness asserts on every run:
+
+  * conservation — every grad_ready is applied, stale-dropped, torn
+    (crash fencing) or lost (PS downtime); nothing vanishes silently
+  * no partial history — every record carries its full schema with a
+    finite loss, and bsp histories are step-contiguous
+  * determinism — the same (seed, schedule) replays bitwise-identically
+"""
+import numpy as np
+import pytest
+
+from repro.config import FaultConfig, LTPConfig, NetConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net.simcore import Sim
+from repro.optim import make_optimizer
+from repro.runtime import (
+    ClusterRuntime,
+    FaultEvent,
+    FaultSchedule,
+    ShardLedger,
+    schedule_from_config,
+)
+from repro.runtime.transport import DESTransport
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NET = NetConfig(10, 1, 0.001, 4096)
+W = 4
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def api():
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    return build(cfg)
+
+
+def _rt(api, policy="bsp", transport="analytic", steps=STEPS, w=W,
+        protocol="ltp", ltp=None, **kw):
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    return ClusterRuntime(api, make_optimizer(tc), tc, ltp or LTPConfig(),
+                          NET, n_workers=w, protocol=protocol, policy=policy,
+                          compute_time=0.05, seed=0, transport=transport,
+                          **kw)
+
+
+def _run(rt, steps=STEPS, w=W):
+    return rt.run(batches(SyntheticCIFAR(seed=0), 4 * w, steps))
+
+
+def _assert_conservation(rt):
+    """Every grad_ready resolves exactly once (telemetry docstring)."""
+    tel = rt.tel
+    n_ready = len(tel.of("grad_ready"))
+    applied = sum(e["n_grads"] for e in tel.of("apply"))
+    n_stale = len(tel.of("stale_drop"))
+    n_torn = len(tel.of("flow_torn"))
+    n_lost = len(tel.of("ps_lost"))
+    assert n_ready == applied + n_stale + n_torn + n_lost, (
+        n_ready, applied, n_stale, n_torn, n_lost)
+
+
+def _assert_complete_history(rt, policy):
+    for r in rt.history:
+        assert np.isfinite(r["loss"])
+        assert {"step", "loss", "sim_time"} <= set(r)
+    if policy == "bsp":
+        # bsp commits are sequential: churn may degrade a round but can
+        # never skip or duplicate an iteration
+        assert [r["step"] for r in rt.history] == list(range(rt.steps))
+
+
+# ---------------------------------------------------------------------------
+# schedule / ledger units
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0.1, "meteor")
+    with pytest.raises(ValueError, match="must be >= 0"):
+        FaultEvent(-1.0, "worker_crash")
+    with pytest.raises(TypeError):
+        FaultSchedule([("not", "an", "event")])
+
+
+def test_fault_schedule_sorted_deterministic():
+    evs = [FaultEvent(0.3, "worker_crash", 1),
+           FaultEvent(0.1, "worker_leave", 0),
+           FaultEvent(0.3, "worker_join", 1)]
+    s = FaultSchedule(evs)
+    assert [e.t for e in s] == [0.1, 0.3, 0.3]
+    # stable: same-t events keep insertion order
+    assert [e.kind for e in s] == ["worker_leave", "worker_crash",
+                                   "worker_join"]
+    a = FaultSchedule.random(8, 2.0, seed=5, crash_rate=1.0,
+                             rejoin_after_s=0.2)
+    b = FaultSchedule.random(8, 2.0, seed=5, crash_rate=1.0,
+                             rejoin_after_s=0.2)
+    assert a.events == b.events and len(a) > 0
+
+
+def test_fault_schedule_respects_min_active():
+    s = FaultSchedule.random(4, 5.0, seed=1, crash_rate=4.0,
+                             leave_rate=2.0, min_active=2)
+    active = set(range(4))
+    for ev in s:
+        if ev.kind in ("worker_crash", "worker_leave"):
+            assert ev.target in active
+            active.discard(ev.target)
+        elif ev.kind == "worker_join":
+            assert ev.target not in active
+            active.add(ev.target)
+        assert len(active) >= 2
+
+
+def test_schedule_from_config_wires_fields():
+    cfg = FaultConfig(crash_rate=2.0, rejoin_after_s=0.5, ps_fail_at=(1.0,),
+                      ps_recovery_s=0.1, min_active=1, seed=9)
+    s = schedule_from_config(cfg, 4, 3.0)
+    kinds = {e.kind for e in s}
+    assert "ps_fail" in kinds
+    ps = [e for e in s if e.kind == "ps_fail"][0]
+    assert ps.t == 1.0 and ps.recover_s == 0.1
+
+
+def test_shard_ledger_failover_and_recover():
+    led = ShardLedger(4)
+    moves = led.fail(2)
+    # survivors [0,1,3]: shard 2 re-homes round-robin to survivors[2 % 3]
+    assert moves == [(2, 2, 3)]
+    assert led.owner == [0, 1, 3, 3] and led.n_alive == 3
+    assert led.fail(2) == []            # idempotent
+    led.fail(0)
+    assert all(o in {1, 3} for o in led.owner)
+    back = led.recover(2)
+    assert back == [(2, 3, 2)] and led.owner[2] == 2
+    # shard 0 stays re-homed until PS 0 itself recovers
+    assert led.owner[0] != 0
+    led.recover(0)
+    assert led.owner == [0, 1, 2, 3] and led.n_alive == 4
+
+
+# ---------------------------------------------------------------------------
+# acceptance: zero faults scheduled == today's runtime, record for record
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["analytic", "des"])
+def test_zero_fault_run_is_record_identical(api, transport):
+    """An armed-but-empty fault layer (schedule, snapshot grid, ledger,
+    flight registry, epoch fences) must be a structural no-op: history
+    and final params match the fault-unaware runtime bitwise."""
+    base = _rt(api, policy="bsp", transport=transport)
+    h0 = _run(base)
+    rt = _rt(api, policy="bsp", transport=transport,
+             faults=FaultSchedule([]), checkpoint_every_s=0.04)
+    h1 = _run(rt)
+    assert len(h0) == len(h1) == STEPS
+    for a, b in zip(h0, h1):
+        assert set(a) == set(b)
+        for k in a:
+            assert a[k] == b[k], (k, a[k], b[k])
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(base.params),
+                    jax.tree_util.tree_leaves(rt.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert len(rt.tel.of("checkpoint")) > 1      # the grid did run
+
+
+# ---------------------------------------------------------------------------
+# chaos/soak: randomized churn across policies x transports
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["bsp", "async", "ssp"])
+@pytest.mark.parametrize("transport", ["analytic", "des"])
+def test_chaos_churn_invariants(api, policy, transport):
+    sched = FaultSchedule.random(W, 0.45, seed=3, crash_rate=2.0,
+                                 rejoin_after_s=0.11, leave_rate=0.5,
+                                 min_active=2)
+    assert len(sched) > 0
+    kw = {"policy_kw": {"staleness": 2}} if policy == "ssp" else {}
+    rt = _rt(api, policy=policy, transport=transport, faults=sched,
+             checkpoint_every_s=0.05, **kw)
+    h = _run(rt)
+    assert len(h) > 0
+    _assert_complete_history(rt, policy)
+    _assert_conservation(rt)
+    # events past the finish time are skipped, never partially applied
+    assert 1 <= rt.tel.summary()["n_faults"] <= len(sched)
+    # lifecycle stream shows real churn
+    states = {e["state"] for e in rt.tel.of("lifecycle")}
+    assert "dead" in states
+
+
+@pytest.mark.parametrize("policy", ["bsp", "ssp"])
+def test_chaos_same_seed_bitwise_identical(api, policy):
+    sched = FaultSchedule.random(W, 0.4, seed=11, crash_rate=2.5,
+                                 rejoin_after_s=0.09, min_active=2)
+    kw = {"policy_kw": {"staleness": 1}} if policy == "ssp" else {}
+    runs = []
+    for _ in range(2):
+        rt = _rt(api, policy=policy, transport="des", faults=sched, **kw)
+        runs.append((_run(rt), list(rt.tel.events)))
+    h1, t1 = runs[0]
+    h2, t2 = runs[1]
+    assert h1 == h2                      # bitwise: same floats, same order
+    assert t1 == t2                      # full telemetry stream replays
+
+
+def test_bsp_crash_degrades_round_then_rebarriers(api):
+    """A mid-round crash with no rejoin: that iteration commits over the
+    survivors (weight W/n keeps the update an unbiased mean), later
+    rounds re-barrier on the surviving set, and the run completes."""
+    sched = FaultSchedule([FaultEvent(0.055, "worker_crash", target=2)])
+    rt = _rt(api, policy="bsp", transport="analytic", faults=sched)
+    h = _run(rt)
+    _assert_complete_history(rt, "bsp")
+    _assert_conservation(rt)
+    degraded = [r for r in h if r.get("n_grads", W) < W]
+    assert degraded and all(r["n_grads"] == W - 1 for r in degraded)
+    assert len(rt.tel.of("flow_torn")) <= 1
+
+
+def test_bsp_graceful_leave_never_tears_flows(api):
+    sched = FaultSchedule([FaultEvent(0.06, "worker_leave", target=1)])
+    rt = _rt(api, policy="bsp", transport="des", faults=sched)
+    _run(rt)
+    _assert_complete_history(rt, "bsp")
+    _assert_conservation(rt)
+    assert rt.tel.of("flow_torn") == []          # drain, don't tear
+    leaves = [e for e in rt.tel.of("lifecycle") if e["state"] == "dead"]
+    assert leaves and leaves[0]["reason"] == "leave"
+
+
+def test_worker_rejoin_pays_warmup_penalty(api):
+    from repro.runtime import DeterministicCompute
+    sched = FaultSchedule([
+        FaultEvent(0.055, "worker_crash", target=0),
+        FaultEvent(0.12, "worker_join", target=0),
+    ])
+    compute = DeterministicCompute(W, base=0.05, rejoin_penalty_s=0.02)
+    rt = _rt(api, policy="bsp", transport="analytic", faults=sched,
+             compute_model=compute)
+    _run(rt)
+    _assert_complete_history(rt, "bsp")
+    _assert_conservation(rt)
+    joins = [e for e in rt.tel.of("lifecycle") if e["state"] == "joining"]
+    assert len(joins) == 1
+    # the joiner's first compute back carries the warm-up penalty
+    post = [e for e in rt.tel.of("compute_start")
+            if e["worker"] == 0 and e["t"] >= 0.12]
+    assert post and abs(post[0]["dt"] - 0.07) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# PS failover from periodic snapshots
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["analytic", "des"])
+def test_ps_failover_restores_and_completes(api, transport, tmp_path):
+    sched = FaultSchedule([
+        FaultEvent(0.16, "ps_fail", target=0, recover_s=0.05),
+    ])
+    rt = _rt(api, policy="bsp", transport=transport, faults=sched,
+             checkpoint_every_s=0.05, checkpoint_dir=str(tmp_path))
+    h = _run(rt)
+    _assert_complete_history(rt, "bsp")
+    _assert_conservation(rt)
+    assert len(rt.tel.of("ps_failover")) == 1
+    assert len(rt.tel.of("ps_lost")) > 0         # downtime really cost us
+    assert (tmp_path / "runtime_ckpt.npz").exists()
+    fo = rt.tel.of("ps_failover")[0]
+    # history was truncated to the snapshot frontier and rebuilt
+    assert fo["n_hist"] <= fo["step"] + 1
+    assert [r["step"] for r in h] == list(range(STEPS))
+
+
+def test_ps_failover_async_rolls_back_and_continues(api):
+    sched = FaultSchedule([
+        FaultEvent(0.15, "ps_fail", target=0, recover_s=0.04),
+    ])
+    rt = _rt(api, policy="async", transport="analytic", faults=sched,
+             checkpoint_every_s=0.04)
+    h = _run(rt)
+    assert len(h) > 0 and all(np.isfinite(r["loss"]) for r in h)
+    _assert_conservation(rt)
+    assert len(rt.tel.of("ps_failover")) == 1
+    # record stream stays step-monotonic across the rollback splice
+    steps = [r["step"] for r in h]
+    assert steps == sorted(steps)
+
+
+def test_ps_fail_without_snapshot_raises(api):
+    sched = FaultSchedule([FaultEvent(0.1, "ps_fail", recover_s=0.01)])
+    rt = _rt(api, policy="bsp", faults=sched)
+    rt._snap = None
+
+    # defeat the automatic t=0 anchor to prove the guard exists
+    orig = rt._take_snapshot
+    rt._take_snapshot = lambda: None
+    try:
+        with pytest.raises(RuntimeError, match="no snapshot"):
+            _run(rt)
+    finally:
+        rt._take_snapshot = orig
+
+
+def test_crash_plus_failover_multi_ps_rebalances(api):
+    sched = FaultSchedule([
+        FaultEvent(0.055, "worker_crash", target=3),
+        FaultEvent(0.17, "ps_fail", target=1, recover_s=0.05),
+        FaultEvent(0.33, "ps_recover", target=1),
+    ])
+    rt = _rt(api, policy="bsp", transport="des", faults=sched,
+             checkpoint_every_s=0.05, n_ps=2)
+    h = _run(rt)
+    _assert_complete_history(rt, "bsp")
+    _assert_conservation(rt)
+    reb = rt.tel.of("rebalance")
+    assert len(reb) == 2                         # fail re-home + recover
+    assert list(reb[0]["owner"]) == [0, 0]       # PS1's shard moved to PS0
+    assert list(reb[1]["owner"]) == [0, 1]       # home again
+    assert [r["step"] for r in h] == list(range(STEPS))
+
+
+# ---------------------------------------------------------------------------
+# generation fencing under churn (transport-level harness)
+# ---------------------------------------------------------------------------
+
+
+def _fence_harness(ops):
+    """Interleave send / crash / time-advance against the pooled DES
+    transport; the delivery callback asserts its flow is still live —
+    a single late delivery from a torn flow fails the run."""
+    sim = Sim()
+    tr = DESTransport(sim, NET, LTPConfig(), "ltp", 2, 8192.0, seed=0)
+    alive = {}
+    fired = []
+    seq = [0]
+
+    def send(wkr):
+        key = (wkr, seq[0])
+        seq[0] += 1
+
+        def cb(masks, frac, early, key=key):
+            assert key in alive, f"torn flow {key} delivered"
+            del alive[key]
+            fired.append(key)
+
+        alive[key] = True
+        tr.send(wkr, cb)
+
+    for op, arg in ops:
+        if op == "send":
+            send(arg % 2)
+        elif op == "crash":
+            wkr = arg % 2
+            for key in [k for k in alive if k[0] == wkr]:
+                del alive[key]
+            tr.teardown_worker(wkr)
+        elif op == "step":
+            sim.run(until=sim.now + arg * 1e-4)
+    # bounded drain (background sources free-run; 1 sim-second is orders
+    # of magnitude past any surviving flow's deadline)
+    sim.run(until=sim.now + 1.0)
+    tr.stop()
+    # whatever was not torn must have delivered: no lost live flows
+    assert alive == {}, f"live flows never delivered: {alive}"
+    return fired
+
+
+def test_generation_fencing_deterministic_interleavings():
+    """Seeded random crash/recycle interleavings (runs without
+    hypothesis): a payload stamped with a dead generation is never
+    delivered, and every surviving flow completes."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        ops = []
+        for _ in range(24):
+            r = rng.random()
+            if r < 0.45:
+                ops.append(("send", int(rng.integers(0, 2))))
+            elif r < 0.65:
+                ops.append(("crash", int(rng.integers(0, 2))))
+            else:
+                ops.append(("step", int(rng.integers(1, 40))))
+        _fence_harness(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("send"), st.integers(0, 1)),
+            st.tuples(st.just("crash"), st.integers(0, 1)),
+            st.tuples(st.just("step"), st.integers(1, 50)),
+        ),
+        min_size=1, max_size=30))
+    def test_generation_fencing_property(ops):
+        """Property form of the fencing invariant: for ANY interleaving
+        of crash/recycle/advance, pooled senders/receivers never deliver
+        a payload stamped with a dead generation."""
+        _fence_harness(list(ops))

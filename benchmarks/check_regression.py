@@ -66,6 +66,19 @@ FLOORS: Dict[str, float] = {
     "grid64_cubic_ps4_events_per_sec": 25_000.0,
     "grid64_ref_coalesced_events_per_sec": 25_000.0,
     "grid64_ref_per_packet_events_per_sec": 4000.0,
+    # the 512-worker rack/spine in-network-aggregation cell (DESIGN.md
+    # §11): the calendar-queue engine must keep DC-scale gathers in CI
+    "rack512_ltp_agg_events_per_sec": 12_000.0,
+}
+
+#: absolute wall-clock ceilings (seconds) — FAIL when current > ceiling.
+#: Coarser than the relative ``_wall_s`` budget: these mark cells whose
+#: very feasibility is the acceptance criterion (the 512-worker DES
+#: gather must complete "in minutes", ISSUE 7 / ROADMAP), so a runaway
+#: run fails even if some slow baseline was once committed. Set ~3x the
+#: authoring-container measurement to absorb runner jitter.
+WALL_CEILINGS: Dict[str, float] = {
+    "rack512_wall_s": 300.0,
 }
 
 #: absolute quality ceilings — FAIL when current > ceiling. Unlike wall
@@ -114,7 +127,10 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
         floor_ok = floor is None or cur >= floor * floor_scale
         ceiling = CEILINGS.get(key)
         ceiling_ok = ceiling is None or cur <= ceiling
-        mark = "ok" if ok and floor_ok and ceiling_ok else "REGRESSION"
+        wall_cap = WALL_CEILINGS.get(key)
+        wall_ok = wall_cap is None or cur <= wall_cap
+        mark = ("ok" if ok and floor_ok and ceiling_ok and wall_ok
+                else "REGRESSION")
         print(f"  {key:45s} base={base:<12g} cur={cur:<12g} "
               f"x{ratio:.2f} [{mark}]")
         if not ok:
@@ -133,6 +149,11 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
                 f"{key}: {cur:g} above absolute ceiling {ceiling:g} "
                 f"(delta {cur - ceiling:+g}; the §10 fault-tolerance "
                 f"acceptance must not silently degrade)")
+        if not wall_ok:
+            failures.append(
+                f"{key}: {cur:g}s above absolute wall-clock ceiling "
+                f"{wall_cap:g}s (the cell's feasibility is the "
+                f"acceptance criterion — a runaway run is a failure)")
     # floors/ceilings also apply to metrics with no baseline entry yet
     for key, floor in sorted(FLOORS.items()):
         if key in baseline or key not in current:
@@ -151,6 +172,14 @@ def compare(current: Dict[str, float], baseline: Dict[str, float],
             failures.append(
                 f"{key}: {cur:g} above absolute ceiling {ceiling:g} "
                 f"(no baseline; delta {cur - ceiling:+g})")
+    for key, wall_cap in sorted(WALL_CEILINGS.items()):
+        if key in baseline or key not in current:
+            continue
+        cur = current[key]
+        if cur > wall_cap:
+            failures.append(
+                f"{key}: {cur:g}s above absolute wall-clock ceiling "
+                f"{wall_cap:g}s (no baseline)")
     return failures
 
 
@@ -168,6 +197,16 @@ def main(argv=None) -> int:
                          "(derate for known-slow runners)")
     args = ap.parse_args(argv)
     files = args.files or list(DEFAULT_FILES)
+    # committed roots only: the gate reads BENCH_*.json record names,
+    # never paths — intermediates (benchmarks/results/*.json and other
+    # gitignored artifacts) cannot be smuggled in as a baseline
+    bad = [n for n in files
+           if os.path.basename(n) != n
+           or not (n.startswith("BENCH_") and n.endswith(".json"))]
+    if bad:
+        print(f"refusing non-root record names {bad}: the gate compares "
+              f"committed BENCH_*.json roots only", file=sys.stderr)
+        return 2
     all_failures = []
     for name in files:
         base_path = os.path.join(args.baseline_dir, name)

@@ -24,7 +24,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.config import LTPConfig, NetConfig, TrainConfig
+from repro.config import LTPConfig, NetConfig, RuntimeConfig, TrainConfig
 from repro.configs import get_config
 from repro.data import SyntheticCIFAR, batches
 from repro.models import build
@@ -50,10 +50,11 @@ DES16_FAULTS = FaultSchedule([
 def _cell(api, tc, w, policy, steps, *, faults=None, transport="analytic",
           checkpoint_every_s=0.0, seed=11):
     rt = ClusterRuntime(
-        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), NET,
+        api, make_optimizer(tc), tc, LTPConfig(), NET,
         n_workers=w, protocol="ltp", policy=policy, compute_time=0.05,
         seed=seed, transport=transport, faults=faults,
-        checkpoint_every_s=checkpoint_every_s)
+        checkpoint_every_s=checkpoint_every_s,
+        runtime_cfg=RuntimeConfig(staleness_comp=0.5))
     t0 = time.time()
     rt.run(batches(SyntheticCIFAR(seed=3), tc.batch, steps))
     wall = time.time() - t0

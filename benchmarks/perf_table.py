@@ -45,6 +45,14 @@ def render(path: str, runtime_path: str = None,
         lines.append(f"| 64x4 reference: per-packet -> trains of {k} "
                      f"| — | {ref:,.0f} -> {twin:,.0f} "
                      f"({m.get('grid64_coalesce_speedup', '?')}x) |")
+    combo = m.get("rack512_combo_speedup_vs_best_single")
+    if combo is not None:
+        eps = m.get("rack512_ltp_agg_events_per_sec")
+        eps_s = f"{eps:,.0f}" if eps else "—"
+        lines.append(
+            f"| rack512: 16x32 rack/spine, 8:1 oversub — LTP + ToR "
+            f"aggregation, {combo}x vs best single mechanism "
+            f"| {m.get('rack512_wall_s', '?'):g} | {eps_s} |")
     sweep = m.get("sweep_small_wall_s")
     if sweep is not None:
         lines.append(f"| small scenario grid (4 protocols x 7 cells) "

@@ -7,7 +7,10 @@ Runs every gather scenario in the registry grid over protocol x knob:
   cross_traffic     bg_load in {0.0, 0.5[, 0.8]}
 
 plus the paper-scale **grid64** (64 workers x {1, 4} PS shards, coalesced
-packet trains) that the per-packet engine could not fit into quick mode.
+packet trains) that the per-packet engine could not fit into quick mode,
+and the DC-scale **rack512** cell (512 workers, 16 racks x 32 behind 8:1
+oversubscribed uplinks) comparing LTP + in-network aggregation against
+each mechanism alone (DESIGN.md §11).
 
 Emits one row per (scenario, protocol, knob): mean/p99 gather BST, mean
 delivered fraction, and LTP's speedup over the same cell's cubic run.
@@ -57,13 +60,15 @@ def _cells(quick: bool):
         yield "cross_traffic", {"bg_load": v}, f"bg_load={v}"
 
 
-def _timed_cell(proto: str, net: NetConfig, *, w: int, size: float,
-                n_ps: int, iters: int, coalesce: int, seed: int = 13):
-    """One measured multi_ps_gather cell -> (results, perf dict)."""
+def _timed_cell(proto: str, net: NetConfig, *, size: float, iters: int,
+                coalesce: int, seed: int = 13,
+                scenario: str = "multi_ps_gather", **scenario_kw):
+    """One measured gather cell -> (results, perf dict)."""
     simcore.PERF.reset()
     t0 = time.time()
-    rs = run_scenario("multi_ps_gather", proto, net, w=w, size_bytes=size,
-                      iters=iters, seed=seed, n_ps=n_ps, coalesce=coalesce)
+    rs = run_scenario(scenario, proto, net, size_bytes=size,
+                      iters=iters, seed=seed, coalesce=coalesce,
+                      **scenario_kw)
     wall = time.time() - t0
     return rs, {
         "wall_s": round(wall, 3),
@@ -109,6 +114,65 @@ def grid64(quick: bool = True):
     return rows, metrics
 
 
+#: the DC-scale rack/spine grid (DESIGN.md §11): 16 racks x 32 workers
+#: behind 8:1 oversubscribed ToR uplinks
+RACK512 = dict(racks=16, workers_per_rack=32, oversub=8.0)
+
+
+def rack512(quick: bool = True):
+    """The 512-worker rack/spine acceptance cell (DESIGN.md §11).
+
+    Three arms of the same coalesced gather, all on the oversubscribed
+    rack grid, isolate what each mechanism buys and what only the combo
+    delivers:
+
+      ltp_agg    LTP Early Close + in-network aggregation at the ToR
+      ltp_only   LTP on the same grid, aggregation off — every worker's
+                 packets individually cross the 8:1 trunk
+      agg_only   in-network aggregation with Early Close disabled
+                 (pct threshold 1.0, deadline pushed out) — the switch
+                 merges, but every loss stalls the gather to full
+                 delivery
+
+    The gated claims: ``rack512_combo_speedup_vs_best_single`` >= 1
+    (the combo beats either mechanism alone), the cell sustains an
+    absolute events/sec floor, and ``rack512_wall_s`` stays under the
+    absolute ceiling — DC-scale gathers must remain a routine CI cell,
+    not an overnight job (check_regression FLOORS / WALL_CEILINGS).
+    """
+    from repro.config import LTPConfig
+
+    net = NetConfig(10, 1, 0.001, 4096)
+    size = 5e5 if quick else 1e6
+    iters = 1 if quick else 2
+    no_ec = LTPConfig(data_pct_threshold=1.0, deadline_c_ms=1e6)
+    arms = (("ltp_agg", True, None),
+            ("ltp_only", False, None),
+            ("agg_only", True, no_ec))
+    rows, metrics = [], {}
+    t0_all = time.time()
+    for name, agg, ltp in arms:
+        rs, perf = _timed_cell(
+            "ltp", net, size=size, iters=iters, coalesce=GRID64_COALESCE,
+            scenario="rack_spine_gather", agg=agg, ltp=ltp, **RACK512)
+        delivered = round(float(np.mean([r.delivered.mean() for r in rs])), 4)
+        rows.append({"scenario": "rack512", "knob": name, "protocol": "ltp",
+                     "delivered": delivered, **perf})
+        metrics[f"rack512_bst_{name}_ms"] = perf["bst_mean_ms"]
+        if name == "ltp_agg":
+            metrics["rack512_ltp_agg_events_per_sec"] = perf["events_per_sec"]
+            metrics["rack512_delivered_ltp_agg"] = delivered
+            stats = rs[-1].agg_stats or {}
+            metrics["rack512_n_merged"] = stats.get("n_merged", 0)
+            metrics["rack512_n_envelopes"] = stats.get("n_envelopes", 0)
+    metrics["rack512_combo_speedup_vs_best_single"] = round(
+        min(metrics["rack512_bst_ltp_only_ms"],
+            metrics["rack512_bst_agg_only_ms"])
+        / metrics["rack512_bst_ltp_agg_ms"], 3)
+    metrics["rack512_wall_s"] = round(time.time() - t0_all, 3)
+    return rows, metrics
+
+
 def run(quick: bool = True):
     rows = []
     iters = 4 if quick else 10
@@ -135,6 +199,9 @@ def run(quick: bool = True):
     sweep_wall = time.time() - t0
     g_rows, metrics = grid64(quick)
     rows.extend(g_rows)
+    r_rows, r_metrics = rack512(quick)
+    rows.extend(r_rows)
+    metrics.update(r_metrics)
     metrics["sweep_small_wall_s"] = round(sweep_wall, 3)
     write_bench(metrics, quick, "BENCH_netsim.json")
     emit(rows, "sweep_scenarios")

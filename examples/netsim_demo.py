@@ -1,7 +1,10 @@
-"""Protocol-level demo: watch Early Close cut the incast tail.
+"""Protocol-level demo: watch Early Close cut the incast tail, then
+watch in-network aggregation cut the rack-uplink bytes.
 
-Runs the packet-level DES for an 8-to-1 gather with stragglers, for LTP
-and cubic, and prints per-iteration close decisions.
+Part 1 runs the packet-level DES for an 8-to-1 gather with stragglers,
+for LTP and cubic, and prints per-iteration close decisions. Part 2
+builds a rack/spine fabric with the topology API (DESIGN.md §11) and
+compares the same gather with ToR aggregation on and off.
 
   PYTHONPATH=src python examples/netsim_demo.py [--loss 0.005]
 """
@@ -10,7 +13,8 @@ import argparse
 import numpy as np
 
 from repro.config import NetConfig
-from repro.net.scenarios import incast_gather
+from repro.net.scenarios import incast_gather, topology_gather
+from repro.net.topology import rack_spine
 
 
 def main():
@@ -31,6 +35,24 @@ def main():
         print("  " + " ".join(f"{b:7.1f}" for b in bst))
         print(f"  delivered: " + " ".join(f"{d:7.2f}" for d in dl))
         print(f"  mean {bst.mean():.1f}ms  p95 {np.percentile(bst,95):.1f}ms")
+
+    # part 2: the same gather on a 4x16 rack/spine fabric with 8:1
+    # oversubscribed ToR uplinks — in-network aggregation merges each
+    # rack's packets into one wire flow per shard at the ToR
+    print("\nrack/spine 4x16, oversub 8:1 (LTP):")
+    for agg in (False, True):
+        topo = rack_spine(4, 16, oversub=8.0, agg=agg)
+        rs = topology_gather("ltp", net, topo.n_workers, size,
+                             topology=topo, iters=max(2, args.iters // 2),
+                             seed=1, coalesce=16)
+        bst = np.array([r.bst_gather for r in rs]) * 1e3
+        label = "ToR aggregation" if agg else "no aggregation "
+        extra = ""
+        if agg and rs[-1].agg_stats:
+            extra = (f"  ({rs[-1].agg_stats['n_merged']} packets merged "
+                     f"into {rs[-1].agg_stats['n_envelopes']} envelopes)")
+        print(f"  {label}: BST mean {bst.mean():7.1f}ms "
+              f"p95 {np.percentile(bst, 95):7.1f}ms{extra}")
 
 
 if __name__ == "__main__":

@@ -151,6 +151,43 @@ class LTPConfig:
     kernel_interpret: bool = True
     seed: int = 0
 
+    def runtime(self) -> "RuntimeConfig":
+        """The runtime/cluster half of this config as a ``RuntimeConfig``."""
+        return RuntimeConfig(**{f.name: getattr(self, f.name)
+                                for f in dataclasses.fields(RuntimeConfig)})
+
+    def with_runtime(self, rc: Optional["RuntimeConfig"]) -> "LTPConfig":
+        """Overlay a ``RuntimeConfig`` onto this protocol config.
+
+        The back-compat bridge for the LTPConfig split (DESIGN.md §11):
+        entry points taking the new ``runtime_cfg=`` fold it in here, so
+        every downstream read of ``ltp.staleness_comp`` /
+        ``ltp.sync_backend`` / ... keeps working unchanged whether the
+        caller used the old combined config or the new split one."""
+        if rc is None:
+            return self
+        return dataclasses.replace(
+            self, **{f.name: getattr(rc, f.name)
+                     for f in dataclasses.fields(RuntimeConfig)})
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Runtime/cluster-side knobs split out of ``LTPConfig`` (DESIGN.md
+    §11): how the PS aggregates and the trainer syncs — none of these
+    change a byte on the wire. ``LTPConfig`` keeps the same-named fields
+    as the back-compat combined surface; pass a ``RuntimeConfig`` via
+    ``runtime_cfg=`` to ``ClusterRuntime`` / ``PSTrainer`` to override
+    them (``LTPConfig.with_runtime``)."""
+
+    # staleness-damped async/SSP reduction weighting (DESIGN.md §8)
+    staleness_comp: float = 0.0
+    error_feedback: bool = False
+    # PS aggregation backend: python | pallas | auto (DESIGN.md §7/§9)
+    sync_backend: str = "python"
+    kernel_interpret: bool = True
+    seed: int = 0
+
 
 @dataclass(frozen=True)
 class NetConfig:

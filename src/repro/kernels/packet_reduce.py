@@ -64,3 +64,42 @@ def packet_reduce(packets, mask, *, compensation: str = "paper",
         out_specs=pl.BlockSpec((BLOCK_P, p), lambda i: (i, 0)),
         interpret=interpret,
     )(packets, mask3)
+
+
+def tree_reduce(packets, mask, rack_of, *, compensation: str = "paper",
+                interpret: bool = True):
+    """Hierarchical (rack → root) masked reduction, DESIGN.md §11.
+
+    Models the aggregation tree's math: each rack's ToR partially reduces
+    its members' delivered packets with the same kernel the PS uses, the
+    root combines the per-rack partial sums. ``rack_of`` maps worker w →
+    rack id. Returns (n_packets, payload) float32 equal to the flat
+    ``packet_reduce(packets, mask)`` to float tolerance (pinned by
+    tests/test_aggtree.py) — the tree moves bytes, never the answer.
+
+    Per rack the kernel's own normalizations are inverted back to raw
+    masked sums (x rack W for "paper", x per-packet counts for "count"),
+    so the root division is the only lossy float step beyond summation
+    order.
+    """
+    w, n, p = packets.shape
+    racks = {}
+    for f in range(w):
+        racks.setdefault(int(rack_of(f)), []).append(f)
+    acc = jnp.zeros((n, p), jnp.float32)
+    cnt = jnp.zeros((n, 1), jnp.float32)
+    for members in racks.values():
+        sub_p = packets[jnp.array(members)]
+        sub_m = mask[jnp.array(members)]
+        partial = packet_reduce(sub_p, sub_m, compensation=compensation,
+                                interpret=interpret)
+        if compensation == "count":
+            c = jnp.sum(sub_m.astype(jnp.float32), axis=0)[:, None]
+            acc = acc + partial * jnp.maximum(c, 1.0)
+            cnt = cnt + c
+        else:
+            acc = acc + partial * len(members)
+            cnt = cnt + jnp.sum(sub_m.astype(jnp.float32), axis=0)[:, None]
+    if compensation == "count":
+        return acc / jnp.maximum(cnt, 1.0)
+    return acc / w

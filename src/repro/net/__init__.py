@@ -14,6 +14,7 @@ from repro.net.simcore import (  # noqa: F401
     Sim,
     Topology,
 )
+from repro.net.aggtree import AggIngress, AggSwitch  # noqa: F401
 from repro.net.scenarios import (  # noqa: F401
     PROTOCOLS,
     SCENARIOS,
@@ -24,7 +25,20 @@ from repro.net.scenarios import (  # noqa: F401
     list_scenarios,
     multi_ps_gather,
     p2p_transfer,
+    rack_spine_gather,
     run_scenario,
     straggler_gather,
+    topology_gather,
     train_iterations,
+)
+# topology-first builders (DESIGN.md §11). The builder result class
+# (repro.net.topology.Topology) is NOT re-exported by name here — it
+# would shadow the simcore pipe registry above; use the builders.
+from repro.net.topology import (  # noqa: F401
+    APIDeprecationWarning,
+    as_topology,
+    flat,
+    multi_ps,
+    rack_spine,
+    resolve_topology,
 )

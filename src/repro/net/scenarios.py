@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.config import LTPConfig, NetConfig
 from repro.net import senders as snd
+from repro.net.aggtree import AggIngress, AggSwitch
 from repro.net.ltp_receiver import (
     LTPFlowReceiver,
     ShardedGatherReceiver,
@@ -46,6 +47,11 @@ from repro.net.simcore import (
     Pipe,
     Sim,
     Topology,
+)
+from repro.net.topology import (       # noqa: F401  (GatherSpec re-exported)
+    GatherSpec,
+    as_topology,
+    rack_spine,
 )
 
 PROTOCOLS = ("ltp", "bbr", "cubic", "reno")
@@ -173,52 +179,9 @@ def utilization_cached(protocol: str, net: NetConfig, size_bytes: float = 4e6,
 # ----------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class GatherSpec:
-    """Topology description for one gather scenario (DESIGN.md §5).
-
-    The default spec is the paper's setup: one PS behind one shared
-    bottleneck, homogeneous workers, no background load. Every field
-    composes with every other.
-    """
-
-    n_ps: int = 1
-    # per-worker access-link heterogeneity; None -> workers attach to the
-    # trunk directly (no extra hop), exactly the paper topology.
-    worker_rate_mult: Optional[np.ndarray] = None   # (W,) x trunk rate
-    worker_delay_ms: Optional[np.ndarray] = None    # (W,) extra one-way ms
-    worker_loss: Optional[np.ndarray] = None        # (W,) access loss prob
-    # open-loop background load per PS trunk, as a fraction of line rate
-    # offered during ON bursts (see CrossTrafficSource).
-    cross_traffic_load: float = 0.0
-    cross_on_ms: float = 5.0
-    cross_off_ms: float = 5.0
-
-    @property
-    def heterogeneous(self) -> bool:
-        return (self.worker_rate_mult is not None
-                or self.worker_delay_ms is not None
-                or self.worker_loss is not None)
-
-    def access_params(self, f: int, net: NetConfig) -> Tuple[float, float, float]:
-        """(rate_bps, one-way delay s, loss) of worker f's access link."""
-        bw = net.bandwidth_gbps * 1e9
-        rate = bw * (self.worker_rate_mult[f]
-                     if self.worker_rate_mult is not None else 1.0)
-        delay = (self.worker_delay_ms[f] * 1e-3
-                 if self.worker_delay_ms is not None else 0.0)
-        loss = (float(self.worker_loss[f])
-                if self.worker_loss is not None else 0.0)
-        return rate, delay, loss
-
-    def worker_share_bps(self, f: int, w: int, net: NetConfig) -> float:
-        """Worker f's attainable per-shard rate: min(trunk fair share,
-        its access-link share across the n_ps concurrent shard flows)."""
-        bw = net.bandwidth_gbps * 1e9
-        share = bw / w
-        if self.worker_rate_mult is not None:
-            share = min(share, bw * self.worker_rate_mult[f] / self.n_ps)
-        return share
+# GatherSpec lives in repro.net.topology (DESIGN.md §11) and is
+# re-imported above so `from repro.net.scenarios import GatherSpec`
+# keeps working for existing call sites.
 
 
 @dataclasses.dataclass
@@ -236,6 +199,9 @@ class GatherResult:
     # the exact mask shape the kernel-backed sync consumes (DESIGN.md §7).
     # All-True for reliable protocols.
     masks: Optional[np.ndarray] = None
+    # summed AggSwitch.stats() over all (shard, rack) ToR aggregation
+    # points (None when the topology has no in-network aggregation).
+    agg_stats: Optional[Dict] = None
 
 
 def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
@@ -243,7 +209,14 @@ def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
                     ) -> Tuple[Topology, List[CrossTrafficSource]]:
     """PS trunks (one pipe group per shard) + optional worker access links
     + optional cross-traffic sources. Forward routes come from
-    ``_fwd_path``; ack/return paths are built per flow by the caller."""
+    ``_fwd_path``; ack/return paths are built per flow by the caller.
+
+    Hierarchical specs (DESIGN.md §11) add one oversubscribed uplink pipe
+    per rack and — with ``inetwork_agg`` — one ``AggSwitch`` per
+    (shard, rack) at the ToR, attached as ``topo.aggs``. Delay model:
+    worker→spine-PS one-way = rtprop (uplink + trunk hop, half each);
+    a shard homed in the worker's own rack skips the uplink hop.
+    """
     bw = net.bandwidth_gbps * 1e9
     topo = Topology(sim)
     half_rtt = net.rtprop_ms * 1e-3 / 2
@@ -258,6 +231,24 @@ def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
             topo.add_pipe(f"w{f}/up",
                           Pipe(sim, rate, delay, loss, net.queue_pkts, rng),
                           group="access")
+    topo.aggs = {}
+    if spec.hierarchical:
+        spec.validate_workers(w, "gather")
+        for r in range(spec.racks):
+            topo.add_pipe(f"rack{r}/up",
+                          Pipe(sim, spec.uplink_bps(net), half_rtt,
+                               net.loss_rate, net.queue_pkts, rng),
+                          group="uplink")
+        if spec.inetwork_agg:
+            hold_s = (spec.agg_hold_ms or 0.25 * net.rtprop_ms) * 1e-3
+            for p in range(spec.n_ps):
+                for r in range(spec.racks):
+                    if spec.ps_rack(p) == r:
+                        upstream = topo.route(f"ps{p}/trunk")
+                    else:
+                        upstream = topo.route(f"rack{r}/up", f"ps{p}/trunk")
+                    topo.aggs[(p, r)] = AggSwitch(
+                        sim, upstream, spec.rack_members(r), hold_s)
     sources: List[CrossTrafficSource] = []
     if spec.cross_traffic_load > 0:
         for p in range(spec.n_ps):
@@ -270,11 +261,39 @@ def _build_topology(sim: Sim, net: NetConfig, w: int, spec: GatherSpec,
     return topo, sources
 
 
-def _fwd_path(topo: Topology, spec: GatherSpec, p: int, f: int):
-    """Worker f's forward path to PS shard p."""
+def _fwd_path(topo: Topology, spec: GatherSpec, p: int, f: int,
+              protocol: str = "ltp"):
+    """Worker f's forward path to PS shard p.
+
+    On rack fabrics with in-network aggregation, LTP flows enter through
+    an ``AggIngress`` at their ToR (order-preserving protocols never
+    aggregate — the switch cannot merge in-order byte streams, so they
+    route over the raw uplink instead)."""
+    if spec.hierarchical:
+        r = spec.rack_of(f)
+        access = topo.pipes[f"w{f}/up"] if spec.heterogeneous else None
+        if spec.inetwork_agg and protocol == "ltp":
+            return AggIngress(topo.aggs[(p, r)], f, access=access)
+        names = [f"w{f}/up"] if spec.heterogeneous else []
+        if spec.ps_rack(p) != r:
+            names.append(f"rack{r}/up")
+        names.append(f"ps{p}/trunk")
+        return topo.route(*names)
     if spec.heterogeneous:
         return topo.route(f"w{f}/up", f"ps{p}/trunk")
     return topo.pipes[f"ps{p}/trunk"]
+
+
+def _agg_stats(topo: Topology) -> Optional[Dict]:
+    aggs = getattr(topo, "aggs", None)
+    if not aggs:
+        return None
+    total: Dict[str, float] = {}
+    for sw in aggs.values():
+        for k, v in sw.stats().items():
+            total[k] = total.get(k, 0) + v
+    total["n_switches"] = len(aggs)
+    return total
 
 
 def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
@@ -304,7 +323,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
     ``coalesce=1`` is the per-packet reference path. BBR ignores it (its
     pacing clock is inherently per-packet).
     """
-    spec = spec or GatherSpec()
+    spec = as_topology(spec or GatherSpec())
     n_ps = spec.n_ps
     coalesce = max(1, int(coalesce))
     sim = Sim()
@@ -349,7 +368,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
             shard = sharded.shard(p)
             for f in range(w):
                 back = Pipe(sim, bw, half_rtt, net.loss_rate, 10_000, rng)
-                s = snd.LTPSender(sim, _fwd_path(topo, spec, p, f),
+                s = snd.LTPSender(sim, _fwd_path(topo, spec, p, f, "ltp"),
                                   shard.on_data, n, critical=crit,
                                   flow=f, rng=rng,
                                   on_done=lambda s: flow_stopped(),
@@ -380,6 +399,7 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
             packets_expected=n_ps * w * n,
             trunk_stats=topo.stats(),
             masks=sharded.delivery_masks(),
+            agg_stats=_agg_stats(topo),
         )
         return res, [[_save_warm(senders[(p, f)]) for f in range(w)]
                      for p in range(n_ps)]
@@ -398,7 +418,8 @@ def _run_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                 if n_done[0] >= n_ps * w:
                     stop_sources()
 
-            s = snd.make_sender(protocol, sim, _fwd_path(topo, spec, p, f),
+            s = snd.make_sender(protocol, sim,
+                                _fwd_path(topo, spec, p, f, protocol),
                                 None, n, flow=f, rng=rng, on_done=on_done,
                                 train_len=coalesce)
             r = snd.TcpReceiver(
@@ -558,6 +579,43 @@ def straggler_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
                            0.0, 0.0, spec, coalesce=coalesce)
 
 
+@register_scenario("topology_gather")
+def topology_gather(protocol: str, net: NetConfig, w: int, size_bytes: float,
+                    topology: Optional[GatherSpec] = None, iters: int = 4,
+                    ltp: Optional[LTPConfig] = None, seed: int = 0,
+                    straggler_prob: float = 0.0, straggler_scale: float = 0.0,
+                    coalesce: int = 1) -> List[GatherResult]:
+    """Gather over an arbitrary ``repro.net.topology`` builder result —
+    the generic topology-first entry point (DESIGN.md §11): flat,
+    multi-PS, and rack/spine (with or without in-network aggregation)
+    all run through the one engine."""
+    spec = as_topology(topology) if topology is not None else None
+    return _iterate_gather(protocol, net, w, size_bytes, iters, ltp, seed,
+                           straggler_prob, straggler_scale, spec,
+                           coalesce=coalesce)
+
+
+@register_scenario("rack_spine_gather")
+def rack_spine_gather(protocol: str, net: NetConfig, size_bytes: float,
+                      racks: int = 4, workers_per_rack: int = 8,
+                      oversub: float = 4.0, n_ps: int = 1, agg: bool = True,
+                      agg_hold_ms: float = 0.0, iters: int = 4,
+                      ltp: Optional[LTPConfig] = None, seed: int = 0,
+                      straggler_prob: float = 0.0,
+                      straggler_scale: float = 0.0, coalesce: int = 1,
+                      w: Optional[int] = None) -> List[GatherResult]:
+    """Rack/spine gather sugar over ``topology_gather``: ToR-attached
+    workers, oversubscribed uplinks, optional in-network aggregation
+    (DESIGN.md §11). ``w`` is implied by the rack grid."""
+    spec = rack_spine(racks, workers_per_rack, oversub=oversub, n_ps=n_ps,
+                      agg=agg, agg_hold_ms=agg_hold_ms)
+    if w is not None:
+        spec.validate_workers(w, "rack_spine_gather")
+    return _iterate_gather(protocol, net, spec.n_workers, size_bytes, iters,
+                           ltp, seed, straggler_prob, straggler_scale, spec,
+                           coalesce=coalesce)
+
+
 @register_scenario("cross_traffic")
 def cross_traffic(protocol: str, net: NetConfig, w: int, size_bytes: float,
                   iters: int = 6, ltp: Optional[LTPConfig] = None,
@@ -601,14 +659,22 @@ def train_iterations(protocol: str, net: NetConfig, w: int, model_bytes: float,
     import inspect
     size = model_bytes * scale
     fn = SCENARIOS[scenario]
-    if "n_ps" in inspect.signature(fn).parameters:
+    if scenario_kw.get("topology") is not None:
+        # topology-first path (DESIGN.md §11): the Topology carries the
+        # shard count for both legs
+        if n_ps != 1 and n_ps != scenario_kw["topology"].n_ps:
+            raise ValueError(
+                f"n_ps={n_ps} contradicts topology.n_ps="
+                f"{scenario_kw['topology'].n_ps}; drop the n_ps kwarg")
+        n_ps = scenario_kw["topology"].n_ps
+    elif "n_ps" in inspect.signature(fn).parameters:
         scenario_kw.setdefault("n_ps", n_ps)
+        n_ps = int(scenario_kw["n_ps"])
     elif n_ps != 1:
         raise ValueError(
             f"scenario {scenario!r} does not take n_ps; use "
             f"scenario='multi_ps_gather' (or another sharding scenario) "
             f"for n_ps={n_ps}")
-    n_ps = int(scenario_kw.get("n_ps", 1))
     gs = run_scenario(scenario, protocol, net, w=w, size_bytes=size,
                       iters=iters, ltp=ltp, seed=seed, **scenario_kw)
     util = utilization_cached(protocol, net, size_bytes=max(4e6, w * size))

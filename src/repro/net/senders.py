@@ -855,6 +855,8 @@ class LTPSender:
                     pkt.meta.get("g", self.gen) != self.gen:
                 return
             self.reg_acked = True
+            if len(self.acked) >= self.n:
+                self._finish()  # data completed while the reg was in flight
             return
         echo = pkt.meta.get("echo") or {}
         if echo.get("g", self.gen) != self.gen:
@@ -867,7 +869,11 @@ class LTPSender:
         self.highest_acked_order = max(self.highest_acked_order, order)
         self._arm_watchdog()
         self._scan_outstanding()
-        if len(self.acked) >= self.n:
+        # the flow is only complete once the registration is acked too:
+        # the reg carries the critical metadata (n, critical set) the
+        # receiver's close rule depends on, so a sender that goes silent
+        # with the reg lost in flight would deadlock the gather
+        if self.reg_acked and len(self.acked) >= self.n:
             self._finish()
             return
         self._pump()
@@ -942,7 +948,7 @@ class LTPSender:
         self._startup_check()
         self._arm_watchdog()
         self._scan_outstanding()
-        if len(self.acked) >= self.n:
+        if self.reg_acked and len(self.acked) >= self.n:
             self._finish()
             return
         self._pump()

@@ -45,7 +45,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import FaultConfig, LTPConfig, NetConfig, TrainConfig
+from repro.config import (
+    FaultConfig,
+    LTPConfig,
+    NetConfig,
+    RuntimeConfig,
+    TrainConfig,
+)
 from repro.core import packets as pk
 from repro.core.early_close import (
     AnalyticIncastModel,
@@ -55,6 +61,7 @@ from repro.core.early_close import (
 from repro.models.api import ModelApi
 from repro.net.scenarios import GatherSpec
 from repro.net.simcore import Sim
+from repro.net.topology import resolve_topology
 from repro.optim import Optimizer, lr_at
 from repro.runtime import step as stp
 from repro.checkpoint.io import restore_checkpoint, save_checkpoint
@@ -110,7 +117,7 @@ class ClusterRuntime:
         policy_kw: Optional[dict] = None,
         compute_model=None,
         compute_time: float = 0.05,
-        n_ps: int = 1,
+        n_ps: Optional[int] = None,
         seed: int = 0,
         transport: str = "analytic",
         spec: Optional[GatherSpec] = None,
@@ -121,9 +128,15 @@ class ClusterRuntime:
         faults=None,
         checkpoint_every_s: float = 0.0,
         checkpoint_dir: Optional[str] = None,
+        topology: Optional[GatherSpec] = None,
+        runtime_cfg: Optional[RuntimeConfig] = None,
     ):
         if transport not in ("analytic", "des"):
             raise ValueError(f"unknown transport {transport!r}")
+        ltp = ltp.with_runtime(runtime_cfg)
+        self.topology = resolve_topology(topology, n_ps=n_ps, spec=spec,
+                                         owner="ClusterRuntime")
+        self.topology.validate_workers(n_workers, "ClusterRuntime")
         self.api = api
         self.opt = opt
         self.train_cfg = train
@@ -131,7 +144,7 @@ class ClusterRuntime:
         self.net = net
         self.w = n_workers
         self.protocol = protocol
-        self.n_ps = n_ps
+        self.n_ps = self.topology.n_ps
         self.seed = seed
         self.transport = transport
         self.sim = Sim()
@@ -165,11 +178,11 @@ class ClusterRuntime:
         # the lockstep PSTrainer exactly)
         self._mask_rng = np.random.default_rng(seed + 23)
         self.controller = MultiPSEarlyClose(ltp, net, n_workers,
-                                            self.model_bytes, n_ps=n_ps)
+                                            self.model_bytes, n_ps=self.n_ps)
         self.gather_models = [
             AnalyticIncastModel(net, n_workers, protocol=protocol,
                                 seed=seed + 1 + 1000 * p)
-            for p in range(n_ps)
+            for p in range(self.n_ps)
         ]
         # async/ssp streams (separate, so they cannot perturb bsp parity)
         self._amask_rng = np.random.default_rng(seed + 29)
@@ -179,7 +192,7 @@ class ClusterRuntime:
         if transport == "des":
             self.net_des = DESTransport(
                 self.sim, net, ltp, protocol, n_workers, self.model_bytes,
-                n_ps=n_ps, spec=spec, seed=seed, coalesce=coalesce,
+                topology=self.topology, seed=seed, coalesce=coalesce,
                 on_early_close=lambda shard, t, d: self.tel.record(
                     "early_close", t, shard=shard, delivered=d))
         else:
@@ -218,7 +231,7 @@ class ClusterRuntime:
         #                             scheduled closures from a dead epoch
         self._flight: Dict[tuple, int] = {}   # (worker, it) -> ps epoch
         self.active_workers: set = set(range(n_workers))
-        self.ledger = ShardLedger(n_ps)
+        self.ledger = ShardLedger(self.n_ps)
 
         self.ps = PSActor(self)
         self.workers: List[WorkerActor] = []

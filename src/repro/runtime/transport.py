@@ -45,6 +45,7 @@ from repro.net.scenarios import (
     _npkts,
 )
 from repro.net.simcore import Packet, Pipe, Sim
+from repro.net.topology import resolve_topology
 
 
 class AnalyticPerWorkerNet:
@@ -151,7 +152,7 @@ class _DESFlowSet:
 
     def _build_flow(self, p: int) -> None:
         tr, w = self.tr, self.worker
-        path = _fwd_path(tr.topo, tr.spec, tr.owner[p], w)
+        path = _fwd_path(tr.topo, tr.spec, tr.owner[p], w, tr.protocol)
         back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate, 10_000,
                     tr.rng)
         if tr.protocol == "ltp":
@@ -313,6 +314,7 @@ class _DESBarrierGather:
         """Mid-round node death: kill the worker's pooled senders, fence
         their generation, and drop the flows from every shard's close
         rule (which may complete the barrier)."""
+        self.tr._mark_live(worker, False)
         for p in range(self.tr.n_ps):
             s = self._senders.get((p, worker))
             if s is not None:
@@ -349,6 +351,8 @@ class _DESBarrierGather:
     def add_worker(self, worker: int) -> None:
         """Start worker's shard flows now (its compute just finished)."""
         tr = self.tr
+        if tr.topo.aggs:
+            tr._mark_live(worker, True)
         for p in range(tr.n_ps):
             shard = self.sharded.shard(p)
             if shard.closed:
@@ -359,7 +363,8 @@ class _DESBarrierGather:
                 back = Pipe(tr.sim, tr.bw, tr.half_rtt, tr.net.loss_rate,
                             10_000, tr.rng)
                 s = snd.LTPSender(
-                    tr.sim, _fwd_path(tr.topo, tr.spec, tr.owner[p], worker),
+                    tr.sim, _fwd_path(tr.topo, tr.spec, tr.owner[p], worker,
+                                      tr.protocol),
                     shard.on_data, tr.n, critical=tr.crit,
                     flow=worker, rng=tr.rng, train_len=tr.coalesce)
                 if tr.coalesce > 1:
@@ -400,15 +405,18 @@ class DESTransport:
 
     def __init__(self, sim: Sim, net: NetConfig, ltp: LTPConfig,
                  protocol: str, n_workers: int, model_bytes: float,
-                 n_ps: int = 1, spec: Optional[GatherSpec] = None,
+                 n_ps: Optional[int] = None, spec: Optional[GatherSpec] = None,
                  seed: int = 0, coalesce: Optional[int] = None,
-                 on_early_close: Optional[Callable] = None):
+                 on_early_close: Optional[Callable] = None,
+                 topology: Optional[GatherSpec] = None):
         self.sim = sim
         self.net = net
         self.ltp = ltp
         self.protocol = protocol
         self.w = n_workers
-        self.spec = spec or GatherSpec(n_ps=n_ps)
+        self.spec = resolve_topology(topology, n_ps=n_ps, spec=spec,
+                                     owner="DESTransport")
+        self.spec.validate_workers(n_workers, "DESTransport")
         self.n_ps = self.spec.n_ps
         self.rng = np.random.default_rng(seed + 101)
         self.bw = net.bandwidth_gbps * 1e9
@@ -458,11 +466,20 @@ class DESTransport:
         for src in self.sources:
             src.stop()
 
+    def _mark_live(self, worker: int, alive: bool) -> None:
+        """Keep the ToR aggregation points' live-membership in sync with
+        node churn (DESIGN.md §10/§11): a dead rack member must not gate
+        membership flushes (the switch would fall back to hold-timer
+        flushes for every seq); a rejoined one must again."""
+        for sw in self.topo.aggs.values():
+            sw.set_live(worker, alive)
+
     # -- fault teardown (DESIGN.md §10) -------------------------------------
     def teardown_worker(self, worker: int) -> None:
         """Node death: fence + silence the worker's in-flight flow sets.
         (bsp barrier flows are torn through the gather's
         ``abandon_worker`` — the runtime owns that round state.)"""
+        self._mark_live(worker, False)
         for fs in self._flowsets.get(worker, []):
             if not fs.idle:
                 fs.teardown()
@@ -495,6 +512,8 @@ class DESTransport:
     # -- async/SSP: independent per-worker flow sets ------------------------
     def send(self, worker: int,
              cb: Callable[[np.ndarray, float, bool], None]) -> None:
+        if self.topo.aggs:
+            self._mark_live(worker, True)
         pool = self._flowsets.setdefault(worker, [])
         fs = next((f for f in pool if f.idle), None)
         if fs is None:

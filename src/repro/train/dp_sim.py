@@ -64,6 +64,7 @@ from repro.core.early_close import (
     broadcast_time,
 )
 from repro.models.api import ModelApi
+from repro.net.topology import resolve_topology
 from repro.optim import Optimizer, lr_at
 from repro.runtime import ClusterRuntime
 from repro.runtime import step as stp
@@ -88,15 +89,21 @@ class PSTrainer:
         delivered_trace: Optional[np.ndarray] = None,
         mask_trace: Optional[np.ndarray] = None,
         seed: int = 0,
-        n_ps: int = 1,
+        n_ps: Optional[int] = None,
         engine: str = "runtime",
         policy="bsp",
         policy_kw: Optional[dict] = None,
         compute_model=None,
         transport: str = "analytic",
+        topology=None,
+        runtime_cfg=None,
     ):
         if engine not in ("runtime", "lockstep"):
             raise ValueError(f"unknown engine {engine!r}")
+        topo = resolve_topology(topology, n_ps=n_ps, owner="PSTrainer")
+        topo.validate_workers(n_workers, "PSTrainer")
+        n_ps = topo.n_ps
+        ltp = ltp.with_runtime(runtime_cfg)
         has_trace = (bst_trace is not None or delivered_trace is not None
                      or mask_trace is not None)
         if has_trace:
@@ -120,7 +127,7 @@ class PSTrainer:
                 api, opt, train, ltp, net, n_workers=n_workers,
                 protocol=protocol, policy=policy, policy_kw=policy_kw,
                 compute_model=compute_model, compute_time=compute_time,
-                n_ps=n_ps, seed=seed, transport=transport)
+                topology=topo, seed=seed, transport=transport)
             # mirror the runtime's state so the public surface is stable
             self.params = self._rt.params
             self.opt_state = self._rt.opt_state

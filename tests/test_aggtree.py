@@ -1,0 +1,256 @@
+"""In-network aggregation at ToR switches (DESIGN.md §11).
+
+Four layers of pinning, smallest to largest:
+
+* the ``AggSwitch`` unit: MLFabric order-aware flush (a completed seq
+  drags every lower pending seq, ascending), pass-through rules, and the
+  retransmit-duplicate path;
+* the reduce math: ``tree_reduce`` (rack partials + root combine) equals
+  the flat ``packet_reduce`` to float tolerance under both compensation
+  modes — the tree moves bytes, never the answer;
+* the gather scenario: at zero loss the tree delivers every packet
+  (all-True masks — so the kernel consuming them computes the flat
+  answer, per the layer above), and the §9 loss accounting survives
+  multi-hop reduction under loss (mask/delivered/counter conservation);
+* the runtime: ``ClusterRuntime`` gathers ride the tree transparently
+  (covered by the bsp DES cell here; async/ssp share the same
+  ``_fwd_path`` plumb).
+"""
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig
+from repro.kernels.packet_reduce import packet_reduce, tree_reduce
+from repro.net.aggtree import AGG_FLOW, AggIngress, AggSwitch
+from repro.net.scenarios import run_scenario
+from repro.net.simcore import Packet, Sim
+from repro.net.topology import rack_spine
+
+NET = NetConfig(10, 1, 0.001, 4096)
+
+
+# ---------------------------------------------------------------------------
+# AggSwitch unit: order-aware flush + pass-through rules
+# ---------------------------------------------------------------------------
+
+
+class _SinkPipe:
+    """Upstream stand-in: records emitted envelope trains."""
+
+    def __init__(self):
+        self.trains = []
+
+    def send_train(self, pkts, deliver_train, t_ready=None):
+        self.trains.append(list(pkts))
+        return len(pkts)
+
+
+def _switch(members=(0, 1, 2), hold=1e-3):
+    sim = Sim()
+    up = _SinkPipe()
+    sw = AggSwitch(sim, up, members, hold)
+    ings = {f: AggIngress(sw, f) for f in members}
+    return sim, up, sw, ings
+
+
+def _data(flow, seq, size=1000, critical=False):
+    return Packet(flow, seq, size, kind="data", critical=critical,
+                  meta={"g": 0})
+
+
+def test_membership_complete_seq_flushes_immediately():
+    sim, up, sw, ings = _switch()
+    for f in (0, 1, 2):
+        ings[f].send_train([_data(f, 5)], lambda items: None)
+    assert len(up.trains) == 1
+    (env,) = up.trains[0]
+    assert env.flow == AGG_FLOW and env.seq == 5
+    assert len(env.meta["agg"]) == 3
+    assert sw.n_merged == 3 and sw.n_envelopes == 1
+    assert sw.stats()["pending"] == 0
+
+
+def test_completed_seq_drags_lower_pending_seqs_in_order():
+    sim, up, sw, ings = _switch()
+    # seq 3 and 7 partially filled, then seq 9 completes
+    ings[0].send_train([_data(0, 3), _data(0, 7), _data(0, 9)],
+                       lambda items: None)
+    ings[1].send_train([_data(1, 9)], lambda items: None)
+    assert up.trains == []          # nothing complete yet
+    ings[2].send_train([_data(2, 9)], lambda items: None)
+    # one flush: seqs 3, 7 (partial) and 9 (full), ascending
+    assert [e.seq for e in up.trains[-1]] == [3, 7, 9]
+    assert sw.stats()["pending"] == 0
+
+
+def test_hold_timer_flushes_stragglers():
+    sim, up, sw, ings = _switch(hold=1e-3)
+    ings[0].send_train([_data(0, 1)], lambda items: None)
+    ings[1].send_train([_data(1, 1)], lambda items: None)
+    assert up.trains == []
+    sim.run(until=0.01)
+    assert sw.n_timeout_flushes == 1
+    (env,) = up.trains[0]
+    assert env.seq == 1 and len(env.meta["agg"]) == 2
+
+
+def test_critical_and_reg_packets_bypass_solo():
+    sim, up, sw, ings = _switch()
+    ings[0].send_train([_data(0, 2, critical=True)], lambda items: None)
+    reg = Packet(1, 0, 64, kind="reg")
+    ings[1].send_train([reg], lambda items: None)
+    assert len(up.trains) == 2 and sw.n_solo == 2 and sw.n_merged == 0
+    for train in up.trains:
+        assert len(train[0].meta["agg"]) == 1
+    assert sw.stats()["pending"] == 0
+
+
+def test_retransmit_duplicate_forwards_older_copy_solo():
+    sim, up, sw, ings = _switch()
+    ings[0].send_train([_data(0, 4)], lambda items: None)
+    ings[0].send_train([_data(0, 4)], lambda items: None)   # retransmit
+    assert sw.n_solo == 1           # older copy forwarded solo
+    assert sw.stats()["pending"] == 1   # newest still waits for 1, 2
+
+
+def test_dead_member_degrades_membership_not_stalls():
+    sim, up, sw, ings = _switch()
+    ings[0].send_train([_data(0, 6)], lambda items: None)
+    ings[1].send_train([_data(1, 6)], lambda items: None)
+    assert up.trains == []
+    sw.set_live(2, False)           # crash: entry is now membership-full
+    assert len(up.trains) == 1
+    assert len(up.trains[0][0].meta["agg"]) == 2
+
+
+def test_envelope_size_is_one_payload_plus_bitmap():
+    sim, up, sw, ings = _switch()
+    for f in (0, 1, 2):
+        ings[f].send_train([_data(f, 0, size=1435)], lambda items: None)
+    (env,) = up.trains[0]
+    assert env.size == 1435 + 2 * 2     # max member + 2B per extra member
+
+
+# ---------------------------------------------------------------------------
+# reduce math: tree == flat to float tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compensation", ["paper", "count"])
+def test_tree_reduce_equals_flat(compensation):
+    rng = np.random.default_rng(5)
+    w, n, p = 8, 128, 128
+    packets = rng.normal(size=(w, n, p)).astype(np.float32)
+    mask = (rng.random((w, n)) > 0.3).astype(np.float32)
+    flat_out = packet_reduce(packets, mask, compensation=compensation)
+    tree_out = tree_reduce(packets, mask, lambda f: f // 2,
+                           compensation=compensation)
+    np.testing.assert_allclose(np.asarray(tree_out), np.asarray(flat_out),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_tree_reduce_unbalanced_racks():
+    rng = np.random.default_rng(6)
+    w, n, p = 8, 128, 128
+    packets = rng.normal(size=(w, n, p)).astype(np.float32)
+    mask = (rng.random((w, n)) > 0.5).astype(np.float32)
+    rack_of = lambda f: 0 if f < 5 else 1   # 5 + 3 split # noqa: E731
+    flat_out = packet_reduce(packets, mask)
+    tree_out = tree_reduce(packets, mask, rack_of)
+    np.testing.assert_allclose(np.asarray(tree_out), np.asarray(flat_out),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gather scenario: whole delivery + loss accounting through the tree
+# ---------------------------------------------------------------------------
+
+
+def test_rack_gather_zero_loss_delivers_everything():
+    # Early Close off (pct threshold 1.0): "whole delivery" is the
+    # regime the tree-vs-flat equivalence claim is stated in — with it
+    # on, a gather may legitimately close at the threshold first
+    net = NetConfig(10, 1, 0.0, 4096)
+    full = LTPConfig(data_pct_threshold=1.0, deadline_c_ms=1e4)
+    rs = run_scenario("rack_spine_gather", "ltp", net, size_bytes=2e5,
+                      racks=2, workers_per_rack=4, oversub=4.0,
+                      iters=2, seed=3, coalesce=8, ltp=full)
+    for r in rs:
+        # full delivery -> all-True masks: the kernel consuming them
+        # computes exactly the flat gather's reduction (tree_reduce
+        # equivalence above closes the loop numerically)
+        assert r.masks is not None and bool(r.masks.all())
+        assert r.delivered.min() == 1.0
+        assert r.packets_received == r.packets_expected
+        assert r.criticals_ok
+    stats = rs[-1].agg_stats
+    assert stats is not None and stats["n_merged"] > 0
+    assert stats["n_envelopes"] > 0
+    assert stats["pending"] == 0        # nothing stuck in ToR buffers
+
+
+def test_rack_gather_agg_stats_absent_when_agg_off():
+    rs = run_scenario("rack_spine_gather", "ltp", NET, size_bytes=1e5,
+                      racks=2, workers_per_rack=4, agg=False,
+                      iters=1, seed=3, coalesce=8)
+    assert rs[0].agg_stats is None
+
+
+def test_rack_gather_lossy_accounting_survives_multihop():
+    net = NetConfig(10, 1, 0.01, 4096)
+    rs = run_scenario("rack_spine_gather", "ltp", net, size_bytes=2e5,
+                      racks=2, workers_per_rack=4, oversub=4.0,
+                      iters=3, seed=7, coalesce=8)
+    for r in rs:
+        n_ps, w, n = r.masks.shape
+        # per-(shard, worker) mask fraction IS the delivered fraction —
+        # a merged envelope lost on the uplink must count against every
+        # member's mask, a delivered one against each exactly once
+        per_worker = r.masks.reshape(n_ps, w, n).mean(axis=(0, 2))
+        np.testing.assert_allclose(per_worker, r.delivered, atol=1e-9)
+        # conservation: the receiver counter covers every mask bit (late
+        # post-close arrivals may exceed the frozen masks, never trail)
+        assert int(r.masks.sum()) <= r.packets_received
+        assert r.packets_received <= r.packets_expected
+        assert r.criticals_ok     # criticals bypass aggregation AND loss
+    assert rs[-1].agg_stats["n_merged"] > 0
+
+
+def test_rack_gather_beats_no_agg_on_oversubscribed_uplinks():
+    net = NetConfig(10, 1, 0.002, 4096)
+    kw = dict(size_bytes=4e5, racks=2, workers_per_rack=8, oversub=8.0,
+              iters=2, seed=11, coalesce=8)
+    bst_agg = np.mean([r.bst_gather for r in run_scenario(
+        "rack_spine_gather", "ltp", net, agg=True, **kw)])
+    bst_solo = np.mean([r.bst_gather for r in run_scenario(
+        "rack_spine_gather", "ltp", net, agg=False, **kw)])
+    assert bst_agg < bst_solo
+
+
+# ---------------------------------------------------------------------------
+# runtime transparency: ClusterRuntime gathers ride the tree
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_bsp_gather_rides_tree():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticCIFAR, batches
+    from repro.models import build
+    from repro.optim import make_optimizer
+    from repro.config import TrainConfig
+    from repro.runtime import ClusterRuntime
+
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    w = 8
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=2)
+    topo = rack_spine(2, 4, oversub=4.0, agg=True)
+    rt = ClusterRuntime(api, make_optimizer(tc), tc, LTPConfig(),
+                        NetConfig(10, 1, 0.003, 4096),
+                        n_workers=w, protocol="ltp", policy="bsp",
+                        transport="des", topology=topo, seed=0)
+    hist = rt.run(batches(SyntheticCIFAR(seed=0), 4 * w, 2))
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    merged = sum(sw.n_merged for sw in rt.net_des.topo.aggs.values())
+    assert merged > 0

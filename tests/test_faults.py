@@ -19,6 +19,7 @@ from repro.configs import get_config
 from repro.data import SyntheticCIFAR, batches
 from repro.models import build
 from repro.net.simcore import Sim
+from repro.net.topology import multi_ps
 from repro.optim import make_optimizer
 from repro.runtime import (
     ClusterRuntime,
@@ -327,7 +328,7 @@ def test_crash_plus_failover_multi_ps_rebalances(api):
         FaultEvent(0.33, "ps_recover", target=1),
     ])
     rt = _rt(api, policy="bsp", transport="des", faults=sched,
-             checkpoint_every_s=0.05, n_ps=2)
+             checkpoint_every_s=0.05, topology=multi_ps(2))
     h = _run(rt)
     _assert_complete_history(rt, "bsp")
     _assert_conservation(rt)

@@ -141,3 +141,47 @@ def test_ltp_receiver_bubbles():
     bubbles = fr.bubbles()
     np.testing.assert_array_equal(bubbles, [False, True] * 5)
     assert fr.pct == 0.5
+
+
+def test_lost_reg_does_not_deadlock_gather():
+    """Regression: the registration packet is lost but every data packet
+    lands and is acked. The sender must NOT finish on data-complete alone
+    — the receiver cannot close (flow length / critical set unknown)
+    until a retried reg arrives, so a sender that went silent here would
+    deadlock the gather past its deadline."""
+    from repro.net import senders as snd
+    from repro.net.ltp_receiver import PSGatherReceiver
+
+    sim = Sim()
+    rng = np.random.default_rng(0)
+
+    class DropFirstReg:
+        def __init__(self, inner):
+            self.inner = inner
+            self.dropped = False
+
+        def send(self, pkt, deliver):
+            if pkt.kind == "reg" and not self.dropped:
+                self.dropped = True
+                return False        # eaten by the wire, exactly once
+            return self.inner.send(pkt, deliver)
+
+        def send_train(self, pkts, deliver_train, t_ready=None):
+            return self.inner.send_train(pkts, deliver_train, t_ready)
+
+    path = DropFirstReg(Pipe(sim, 1e9, 0.0005, 0.0, 10_000, rng))
+    back = Pipe(sim, 1e9, 0.0005, 0.0, 10_000, rng)
+    stops = {}
+    ps = PSGatherReceiver(sim, [0], lt_threshold=0.005, deadline=0.05,
+                          pct_threshold=0.8,
+                          send_stop=lambda f: stops[f]())
+    n = 20
+    s = snd.LTPSender(sim, path, ps.on_data, n, flow=0, rng=rng)
+    ps.attach_ack(0, lambda pkt: back.send(pkt, s.on_ack))
+    stops[0] = lambda: back.send(Packet(0, -2, 41, kind="stop"), s.on_ack)
+    sim.at(0.0, s.start)
+    sim.run(until=10.0)
+    assert path.dropped
+    assert s.reg_acked           # the reg retry chain survived data-complete
+    assert ps.closed             # and the gather closed on its arrival
+    assert ps.flows[0].n == n

@@ -89,6 +89,12 @@ WALL_CEILINGS: Dict[str, float] = {
 #: whatever baseline was last committed.
 CEILINGS: Dict[str, float] = {
     "fault_des16_final_loss_ratio": 1.10,
+    # observability layer (DESIGN.md §12): warm DES events/s with the
+    # tracker off divided by the same cell with the JSONL tracker
+    # attached (both best-of-2, runtime_sweep). The backend is a
+    # buffered O(1) append per event, so the honest cost is a couple
+    # percent — 1.05 is the spec budget (ISSUE 8) incl. runner jitter.
+    "telemetry_overhead_ratio": 1.05,
 }
 
 

@@ -70,6 +70,14 @@ def render(path: str, runtime_path: str = None,
             k64 = r.get("runtime_des64_coalesce", "?")
             lines.append(f"| runtime DES co-sim, 64 workers bsp/ltp "
                          f"(trains of {k64}) | — | {des64:,.0f} |")
+        jsonl = r.get("runtime_des_jsonl_events_per_sec")
+        ratio = r.get("telemetry_overhead_ratio")
+        if des and jsonl:
+            ratio_s = f"{ratio:g}x" if ratio is not None else "?"
+            lines.append(
+                f"| observability: same cell, tracker off -> JSONL "
+                f"(overhead {ratio_s}, ceiling 1.05) "
+                f"| — | {des:,.0f} -> {jsonl:,.0f} |")
     if faults_path and os.path.exists(faults_path):
         fm = _metrics(faults_path)
         ratio = fm.get("fault_des16_final_loss_ratio")

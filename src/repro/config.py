@@ -111,6 +111,37 @@ class MeshConfig:
 
 
 @dataclass(frozen=True)
+class ObservabilityConfig:
+    """Where runtime telemetry goes (DESIGN.md §12).
+
+    ``tracker`` selects the sink backend by name — one of
+    ``repro.obs.TRACKER_BACKENDS`` (``"none"``, ``"memory"``,
+    ``"jsonl"``, ``"csv"``, ``"tensorboard"``) or a comma-separated
+    list for fan-out. ``"none"`` is the zero-overhead default: the
+    runtime holds no tracker object at all and runs are bitwise
+    identical to a build without the observability layer.
+
+    Frozen + hashable on purpose: this config rides inside
+    ``LTPConfig``, which is part of the jit-cache key in
+    ``runtime/step.py``.
+    """
+
+    tracker: str = "none"
+    # file backends write to ``path`` when set, else
+    # ``<out_dir>/<run_name>.<ext>``
+    out_dir: str = "runs"
+    path: Optional[str] = None
+    run_name: str = "run"
+    # histogram reservoir size for the metrics registry (Algorithm R)
+    reservoir: int = 1024
+    # sample per-trunk queue depths on the ``Sim.every`` grid (feeds the
+    # per-trunk counter tracks in the Chrome trace). Only read when a
+    # tracker is active — with ``tracker="none"`` the queue events stay
+    # exactly as before.
+    sample_trunks: bool = True
+
+
+@dataclass(frozen=True)
 class LTPConfig:
     """Paper knobs (§III). Defaults follow the paper where it gives numbers."""
 
@@ -150,6 +181,9 @@ class LTPConfig:
     # compile the fused tiles.
     kernel_interpret: bool = True
     seed: int = 0
+    # telemetry sink selection (DESIGN.md §12); None == all defaults
+    # (tracker "none", zero overhead)
+    obs: Optional[ObservabilityConfig] = None
 
     def runtime(self) -> "RuntimeConfig":
         """The runtime/cluster half of this config as a ``RuntimeConfig``."""
@@ -187,6 +221,8 @@ class RuntimeConfig:
     sync_backend: str = "python"
     kernel_interpret: bool = True
     seed: int = 0
+    # telemetry sink selection (DESIGN.md §12); None == tracker "none"
+    obs: Optional[ObservabilityConfig] = None
 
 
 @dataclass(frozen=True)

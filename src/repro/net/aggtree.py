@@ -133,6 +133,7 @@ class AggSwitch:
         self.n_merged = 0      # member packets folded into envelopes
         self.n_envelopes = 0   # merged envelopes emitted upstream
         self.n_timeout_flushes = 0
+        self.n_membership_flushes = 0  # entries flushed by a member going dead
 
     # -- membership (fault hooks, DESIGN.md §10) ----------------------------
     def set_live(self, flow: int, alive: bool) -> None:
@@ -145,6 +146,7 @@ class AggSwitch:
         # entries may have just become membership-complete
         full = [s for s, e in self._open.items() if self.live <= e[1].keys()]
         if full:
+            self.n_membership_flushes += len(full)
             self._emit(self._collect(max(full)))
 
     # -- datapath -----------------------------------------------------------
@@ -252,5 +254,6 @@ class AggSwitch:
             "n_merged": self.n_merged,
             "n_envelopes": self.n_envelopes,
             "n_timeout_flushes": self.n_timeout_flushes,
+            "n_membership_flushes": self.n_membership_flushes,
             "pending": len(self._open),
         }

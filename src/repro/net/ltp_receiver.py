@@ -165,6 +165,10 @@ class PSGatherReceiver:
         #: and their delivery masks report zeros — a dead node's partial
         #: gradient must never reach the reduction.
         self._dead: Set[int] = set()
+        # observability counters (DESIGN.md §12) — cumulative across the
+        # pooled gather's lives: initialized here, NOT cleared by reset()
+        self.n_stale_fenced = 0   # data packets fenced by the generation gate
+        self.n_stop_resends = 0   # stops re-sent on post-close arrivals
         for f in flows:
             self.flows[f] = LTPFlowReceiver(sim, lambda p: None, f)
         self.reset()
@@ -230,6 +234,7 @@ class PSGatherReceiver:
         if fr is None:
             return
         if self._stale(pkt):
+            self.n_stale_fenced += 1
             if self.on_stale is not None:
                 self.on_stale(pkt.flow, pkt.meta.get("g"))
             return
@@ -237,6 +242,7 @@ class PSGatherReceiver:
             # data after close means the flow's "stop" was lost in flight:
             # re-send it (once per arriving packet, so the retry rate is
             # bounded by the sender's own transmission rate)
+            self.n_stop_resends += 1
             self.send_stop(pkt.flow)
             return
         fr.on_data(pkt, self._check)
@@ -248,6 +254,7 @@ class PSGatherReceiver:
         stale = [(p.flow, p.meta.get("g")) for p, _ in items
                  if self._stale(p)]
         if stale:
+            self.n_stale_fenced += len(stale)
             if self.on_stale is not None:
                 for flow, g in dict.fromkeys(stale):
                     self.on_stale(flow, g)
@@ -257,6 +264,7 @@ class PSGatherReceiver:
         if self.closed:
             for flow in {p.flow for p, _ in items}:
                 if flow in self.flows:
+                    self.n_stop_resends += 1
                     self.send_stop(flow)
             return
         by_flow: Dict[int, TrainItems] = {}

@@ -645,6 +645,11 @@ class LTPSender:
         self.gen = 0
         self.watchdog: Optional[int] = None
         self.pacing_timer: Optional[int] = None
+        # observability counters (DESIGN.md §12) — cumulative across the
+        # pooled flow's lives: initialized here, NOT cleared by reset()
+        self.n_retx = 0         # packets requeued after detected loss
+        self.n_ack_trains = 0   # coalesced ACK trains consumed
+        self.n_gen_fenced = 0   # ACKs/stops dropped by the generation fence
         self.reset()
 
     def reset(self, gen: Optional[int] = None) -> None:
@@ -741,6 +746,7 @@ class LTPSender:
         self._pump()
 
     def _requeue_lost(self, seq: int):
+        self.n_retx += 1
         if self.critical[seq]:
             self.cq.append(seq)
         else:
@@ -841,6 +847,7 @@ class LTPSender:
         if pkt.kind == "stop":
             if isinstance(pkt.meta, dict) and \
                     pkt.meta.get("g", self.gen) != self.gen:
+                self.n_gen_fenced += 1
                 return      # stop aimed at a previous life of this flow
             self.stopped = True
             self.done = True
@@ -853,6 +860,7 @@ class LTPSender:
         if seq == -1:           # registration ack
             if isinstance(pkt.meta, dict) and \
                     pkt.meta.get("g", self.gen) != self.gen:
+                self.n_gen_fenced += 1
                 return
             self.reg_acked = True
             if len(self.acked) >= self.n:
@@ -860,6 +868,7 @@ class LTPSender:
             return
         echo = pkt.meta.get("echo") or {}
         if echo.get("g", self.gen) != self.gen:
+            self.n_gen_fenced += 1
             return          # ACK for a previous life of this pooled flow
         if "t" in echo:
             self.est.on_ack(self.payload, self.sim.now - echo["t"])
@@ -921,6 +930,7 @@ class LTPSender:
         scan / watchdog / pump each run once."""
         if self.done:
             return
+        self.n_ack_trains += 1
         rtts = []
         for pkt, _t in items:
             if pkt.kind == "stop":
@@ -931,11 +941,13 @@ class LTPSender:
             if pkt.seq == -1:
                 if isinstance(pkt.meta, dict) and \
                         pkt.meta.get("g", self.gen) != self.gen:
+                    self.n_gen_fenced += 1
                     continue
                 self.reg_acked = True
                 continue
             echo = pkt.meta.get("echo") or {}
             if echo.get("g", self.gen) != self.gen:
+                self.n_gen_fenced += 1
                 continue    # ACK for a previous life of this pooled flow
             if "t" in echo:
                 rtts.append(self.sim.now - echo["t"])
@@ -952,3 +964,10 @@ class LTPSender:
             self._finish()
             return
         self._pump()
+
+    def stats(self) -> Dict[str, int]:
+        """Cumulative per-flow counters across pooled lives
+        (DESIGN.md §12)."""
+        return {"n_retx": self.n_retx,
+                "n_ack_trains": self.n_ack_trains,
+                "n_gen_fenced": self.n_gen_fenced}

@@ -66,6 +66,10 @@ class PerfCounters:
         self.events = 0
         self.packets = 0
 
+    def snapshot(self) -> dict:
+        """Plain-dict view for the metrics registry (DESIGN.md §12)."""
+        return {"events": self.events, "packets": self.packets}
+
 
 PERF = PerfCounters()
 

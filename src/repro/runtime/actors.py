@@ -46,6 +46,12 @@ class WorkerActor:
         self.state = "active"  # joining | active | draining | dead
         self._compute_eid = None
         self._rejoin_pending = False  # charge rejoin_penalty_s next compute
+        # pre-bound instrument (DESIGN.md §12): attribute deref + one
+        # reservoir observe per compute — never a name lookup per event.
+        # None when no tracker is attached, so the no-observability path
+        # pays a single is-None branch.
+        self._h_compute = (rt.metrics.histogram("worker/compute_s")
+                           if rt.tracker is not None else None)
 
     def start(self) -> None:
         self._try_begin()
@@ -151,6 +157,8 @@ class WorkerActor:
             dt += getattr(rt.compute, "rejoin_penalty_s", 0.0)
             self._rejoin_pending = False
         it = self.it
+        if self._h_compute is not None:
+            self._h_compute.observe(dt)
         rt.tel.record("compute_start", rt.sim.now, worker=self.idx,
                       iteration=it, dt=dt)
         self.busy = True
@@ -184,6 +192,9 @@ class PSActor:
 
     def __init__(self, rt: "ClusterRuntime"):
         self.rt = rt
+        # pre-bound instrument (DESIGN.md §12; see WorkerActor)
+        self._h_stale = (rt.metrics.histogram("ps/arrival_staleness")
+                         if rt.tracker is not None else None)
 
     def on_arrival(self, g: PendingGrad) -> None:
         rt = self.rt
@@ -194,6 +205,8 @@ class PSActor:
                           iteration=g.iteration)
             rt.maybe_finish()
             return
+        if self._h_stale is not None:
+            self._h_stale.observe(g.staleness)
         rt.tel.record("grad_arrived", rt.sim.now, worker=g.worker,
                       iteration=g.iteration, staleness=g.staleness,
                       delivered=float(g.payload["frac"]))

@@ -64,6 +64,15 @@ class FaultEvent:
         if self.t < 0:
             raise ValueError(f"fault time must be >= 0, got {self.t}")
 
+    def label(self) -> str:
+        """Human-readable marker text for trace exports (DESIGN.md §12),
+        e.g. ``"crash worker3 @12.50s"``."""
+        unit = "ps" if self.kind.startswith("ps_") else "worker"
+        s = f"{self.kind} {unit}{self.target} @{self.t:.2f}s"
+        if self.recover_s:
+            s += f" (+{self.recover_s:.2f}s recovery)"
+        return s
+
 
 class FaultSchedule:
     """Ordered, deterministic fault timeline.

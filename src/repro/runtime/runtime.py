@@ -49,6 +49,7 @@ from repro.config import (
     FaultConfig,
     LTPConfig,
     NetConfig,
+    ObservabilityConfig,
     RuntimeConfig,
     TrainConfig,
 )
@@ -60,7 +61,9 @@ from repro.core.early_close import (
 )
 from repro.models.api import ModelApi
 from repro.net.scenarios import GatherSpec
-from repro.net.simcore import Sim
+from repro.net.simcore import PERF, Sim
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracker import make_tracker
 from repro.net.topology import resolve_topology
 from repro.optim import Optimizer, lr_at
 from repro.runtime import step as stp
@@ -130,6 +133,7 @@ class ClusterRuntime:
         checkpoint_dir: Optional[str] = None,
         topology: Optional[GatherSpec] = None,
         runtime_cfg: Optional[RuntimeConfig] = None,
+        obs: Optional[ObservabilityConfig] = None,
     ):
         if transport not in ("analytic", "des"):
             raise ValueError(f"unknown transport {transport!r}")
@@ -148,7 +152,19 @@ class ClusterRuntime:
         self.seed = seed
         self.transport = transport
         self.sim = Sim()
-        self.tel = Telemetry(telemetry)
+        # observability layer (DESIGN.md §12): the explicit ``obs=``
+        # kwarg wins, else the config riding on LTPConfig/RuntimeConfig.
+        # tracker="none" resolves to tracker None — the runtime then
+        # holds no sink and every hot path keeps its exact old shape
+        # (bitwise-identical runs, pinned in tests/test_obs.py).
+        self.obs_cfg = obs if obs is not None \
+            else (ltp.obs or ObservabilityConfig())
+        self.tracker = make_tracker(self.obs_cfg,
+                                    run_name=self.obs_cfg.run_name)
+        self.metrics = MetricsRegistry(reservoir=self.obs_cfg.reservoir,
+                                       seed=seed)
+        self._perf0: Dict[str, int] = {}
+        self.tel = Telemetry(telemetry, tracker=self.tracker)
         self.policy: AggregationPolicy = make_policy(policy,
                                                      **(policy_kw or {}))
         # LTPConfig.staleness_comp governs the damping law for BOTH
@@ -989,14 +1005,43 @@ class ClusterRuntime:
         if self.faults is not None:
             self.faults.arm(self.sim, self.on_fault)
         if self.net_des is not None and self.tel.enabled:
-            # trunk-queue sampler: an actor hook on the shared clock
+            # trunk-queue sampler: an actor hook on the shared clock.
+            # The O(n_ps) topology walk lives HERE, on the wall grid —
+            # never in a per-event hook (DESIGN.md §9/§12).
             interval = max(self.net.rtprop_ms * 1e-3, 1e-3)
-            self._sampler_cancel = self.sim.every(
-                interval,
-                lambda: self.tel.record(
-                    "queue", self.sim.now,
-                    depth=self.policy.pending_count(),
-                    net_depth=self.net_des.queue_depth_pkts()))
+            if self.tracker is not None:
+                # tracker-active arm: per-trunk depths (feeds the trace
+                # exporter's per-trunk counter tracks) + histograms.
+                # Separate lambda so tracker="none" keeps the exact old
+                # event payload, byte for byte.
+                h_pend = self.metrics.histogram("queue/ps_pending")
+                h_net = self.metrics.histogram("queue/trunk_max_pkts")
+                sample_trunks = self.obs_cfg.sample_trunks
+
+                def _sample():
+                    depth = self.policy.pending_count()
+                    net_depth = self.net_des.queue_depth_pkts()
+                    h_pend.observe(depth)
+                    h_net.observe(net_depth)
+                    if sample_trunks:
+                        self.tel.record(
+                            "queue", self.sim.now, depth=depth,
+                            net_depth=net_depth,
+                            trunks=self.net_des.trunk_depths())
+                    else:
+                        self.tel.record("queue", self.sim.now, depth=depth,
+                                        net_depth=net_depth)
+
+                self._sampler_cancel = self.sim.every(interval, _sample)
+            else:
+                self._sampler_cancel = self.sim.every(
+                    interval,
+                    lambda: self.tel.record(
+                        "queue", self.sim.now,
+                        depth=self.policy.pending_count(),
+                        net_depth=self.net_des.queue_depth_pkts()))
+        if self.tracker is not None:
+            self._perf0 = PERF.snapshot()
         for wk in self.workers:
             wk.start()
         self.sim.run(max_events=max_events)
@@ -1019,6 +1064,8 @@ class ClusterRuntime:
         if self._ckpt_cancel is not None:
             self._ckpt_cancel()
         self._finalize_history()
+        if self.tracker is not None:
+            self._emit_observability()
         return self.history
 
     def _finalize_history(self) -> None:
@@ -1034,6 +1081,42 @@ class ClusterRuntime:
             v = e.get("loss")
             if v is not None and not isinstance(v, (int, float)):
                 e["loss"] = float(v)
+
+    def _emit_observability(self) -> None:
+        """Final flush into the tracker (DESIGN.md §12), AFTER
+        ``_finalize_history`` forced the lazy jax scalars: per-step
+        metric points from the history, the metrics-registry snapshot
+        (PERF delta for this run, cumulative per-flow/per-switch
+        protocol counters) folded into the run summary, then
+        ``finish()`` — the only point where file I/O may block."""
+        perf = PERF.snapshot()
+        self.metrics.absorb(
+            "sim", {k: v - self._perf0.get(k, 0) for k, v in perf.items()})
+        if self.net_des is not None:
+            self.metrics.absorb("flow", self.net_des.flow_stats())
+        for rec in self.history:
+            self.tracker.log_metrics(
+                {k: v for k, v in rec.items()
+                 if isinstance(v, (int, float))},
+                step=int(rec["step"]))
+        summary = dict(self.tel.summary())
+        summary.update(self.metrics.snapshot())
+        self.tracker.log_summary(summary)
+        self.tracker.finish()
+
+    def export_trace(self, path: str,
+                     meta: Optional[dict] = None) -> dict:
+        """Write this run's event stream as a Chrome trace (Perfetto-
+        loadable; DESIGN.md §12). Call after ``run()``; returns the
+        trace document."""
+        from repro.obs.trace import write_chrome_trace
+        base = {"policy": type(self.policy).__name__,
+                "protocol": self.protocol, "transport": self.transport,
+                "seed": self.seed}
+        if meta:
+            base.update(meta)
+        return write_chrome_trace(path, self.tel.events, n_workers=self.w,
+                                  n_ps=self.n_ps, meta=base)
 
     # throughput in items/sec of simulated wall-clock
     def throughput(self, items_per_step: int) -> float:

@@ -1,37 +1,17 @@
-"""Structured runtime telemetry (DESIGN.md §8).
+"""Structured runtime telemetry (DESIGN.md §8) — now a thin façade over
+the observability layer (DESIGN.md §12).
 
 Every actor/policy event in a ``ClusterRuntime`` run lands here as one
 flat dict — an append-only stream the benchmarks and tests consume
 directly, and ``summary()`` reduces into the scalar fields the sweep
-rows carry.
+rows carry. The full event schema (kinds, payload fields, and the
+chaos-suite conservation law) is documented in DESIGN.md §12.1; the
+stream itself is unchanged by the façade split.
 
-Event schema — common fields ``kind`` (str) and ``t`` (sim seconds),
-plus per-kind payload:
-
-  compute_start   worker, iteration, dt
-  grad_ready      worker, iteration            (compute leg done)
-  grad_arrived    worker, iteration, staleness, delivered
-  apply           step, n_grads, staleness_max, staleness_mean, loss
-  early_close     worker|shard, iteration, delivered   (EC fire time = t)
-  stale_drop      worker, iteration, staleness (SSP rejected the grad)
-  block/unblock   worker, iteration            (SSP/BSP gating)
-  queue           depth [, net_depth]          (PS pending / trunk pkts)
-  masks           [worker,] iteration, digest  (DES delivery-mask hash)
-
-Fault-layer kinds (DESIGN.md §10; absent in a zero-fault run):
-
-  fault           fault, target                (injected FaultEvent kind)
-  lifecycle       worker, state, iteration [, reason]
-  flow_torn       worker, iteration   (crash fenced an in-flight grad)
-  ps_lost         worker, iteration   (PS downtime swallowed a grad)
-  ps_failover     ps, step, n_hist    (snapshot restored, history cut)
-  checkpoint      step, n_hist        (periodic snapshot taken)
-  rebalance       owner               (shard ownership re-homed)
-
-Conservation law the chaos suite asserts: every grad_ready is applied,
-stale-dropped, torn, or lost —
-``n(grad_ready) == sum(apply.n_grads) + n(stale_drop) + n(flow_torn)
-+ n(ps_lost)``.
+When a ``Tracker`` (``repro.obs.tracker``) is attached, every recorded
+event is also forwarded to it — one extra O(1) buffered append per
+event, nothing more. With no tracker the stream behaves exactly as it
+always has (``tracker="none"`` is bitwise-identical by construction).
 
 Sampling discipline (DESIGN.md §9): per-event hooks record O(1)
 payloads only; anything that walks topology state (trunk queue depths)
@@ -39,23 +19,44 @@ is sampled on the runtime's ``Sim.every`` wall grid, never per event.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 
 class Telemetry:
-    def __init__(self, enabled: bool = True):
+    """Append-only event stream + scalar reduction.
+
+    ``record`` keeps a per-kind index alongside the flat stream so
+    ``of(kind)`` is O(matches), not an O(n) scan — ``summary()`` calls
+    it once per kind, and benchmarks/tests call it in loops.
+    """
+
+    def __init__(self, enabled: bool = True, tracker=None):
         self.enabled = enabled
+        self.tracker = tracker
         self.events: List[dict] = []
+        self._by_kind: Dict[str, List[dict]] = {}
 
     def record(self, kind: str, t: float, **fields) -> None:
         if not self.enabled:
             return
-        self.events.append({"kind": kind, "t": float(t), **fields})
+        e = {"kind": kind, "t": float(t), **fields}
+        self.events.append(e)
+        bucket = self._by_kind.get(kind)
+        if bucket is None:
+            bucket = self._by_kind[kind] = []
+        bucket.append(e)
+        if self.tracker is not None:
+            self.tracker.log_event(e)
 
     def of(self, kind: str) -> List[dict]:
-        return [e for e in self.events if e["kind"] == kind]
+        """Events of one kind, in stream order (a fresh list; mutating
+        it does not corrupt the index)."""
+        return list(self._by_kind.get(kind, ()))
+
+    def _count(self, kind: str) -> int:
+        return len(self._by_kind.get(kind, ()))
 
     def blocked_seconds(self) -> float:
         """Total worker-seconds spent blocked on the staleness/barrier
@@ -85,7 +86,7 @@ class Telemetry:
             "n_events": len(self.events),
             "n_applies": len(applies),
             "n_early_close": len(closes),
-            "n_stale_drops": len(self.of("stale_drop")),
+            "n_stale_drops": self._count("stale_drop"),
             "blocked_s": round(self.blocked_seconds(), 6),
             "staleness_max": int(max(stale)) if stale else 0,
             "staleness_mean": round(float(np.mean(stale_mean)), 4)
@@ -101,11 +102,28 @@ class Telemetry:
         if closes:
             out["early_close_mean_delivered"] = round(
                 float(np.mean([e["delivered"] for e in closes])), 4)
-        faults = self.of("fault")
-        if faults:
-            out["n_faults"] = len(faults)
-            out["n_flow_torn"] = len(self.of("flow_torn"))
-            out["n_ps_lost"] = len(self.of("ps_lost"))
-            out["n_failovers"] = len(self.of("ps_failover"))
-            out["n_checkpoints"] = len(self.of("checkpoint"))
+        # fault-layer scalars: each emitted whenever its events exist —
+        # a manually driven failover or tear (no injected FaultEvent)
+        # must not silently drop its count. A faulted run still carries
+        # the full key set (zeros included), record-for-record as before.
+        n_faults = self._count("fault")
+        if n_faults:
+            out["n_faults"] = n_faults
+        for key, kind in (("n_flow_torn", "flow_torn"),
+                          ("n_ps_lost", "ps_lost"),
+                          ("n_failovers", "ps_failover"),
+                          ("n_checkpoints", "checkpoint")):
+            n = self._count(kind)
+            if n or n_faults:
+                out[key] = n
         return out
+
+    # -- observability-layer hooks (DESIGN.md §12) ---------------------
+
+    def attach(self, tracker: Optional[object]) -> None:
+        """Attach a Tracker sink; already-recorded events are replayed
+        into it so attachment order doesn't lose the stream prefix."""
+        self.tracker = tracker
+        if tracker is not None:
+            for e in self.events:
+                tracker.log_event(e)

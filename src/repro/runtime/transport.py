@@ -30,7 +30,7 @@ runtime's shared ``Sim`` clock:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -533,3 +533,41 @@ class DESTransport:
         """Max trunk queue depth right now (telemetry sampler hook);
         O(n_ps) over cached pipe handles — no dict rebuild per sample."""
         return max((p.queue_len() for p in self._trunks), default=0.0)
+
+    def trunk_depths(self) -> Tuple[float, ...]:
+        """Per-trunk queue depths right now (observability sampler hook,
+        DESIGN.md §12); O(n_ps) on the ``Sim.every`` grid only."""
+        return tuple(p.queue_len() for p in self._trunks)
+
+    def flow_stats(self) -> Dict[str, float]:
+        """Cumulative per-flow protocol counters summed over every
+        pooled sender/receiver plus the in-network aggregation points
+        (DESIGN.md §12): retransmits, ACK trains consumed, sender-side
+        generation-fenced ACKs, receiver-side fenced data packets,
+        post-close stop re-sends, and ``agg/*`` switch stats. Pools
+        dropped by a failover rebalance (``set_shard_owners``) take
+        their counts with them — a rare, bounded fault path."""
+        out: Dict[str, float] = {"n_retx": 0, "n_ack_trains": 0,
+                                 "n_gen_fenced": 0, "n_stale_fenced": 0,
+                                 "n_stop_resends": 0}
+        senders: List = []
+        recvs: List = []
+        for pool in self._flowsets.values():
+            for fs in pool:
+                senders.extend(fs.senders)
+                recvs.extend(fs.recvs)
+        if self._barrier is not None:
+            senders.extend(self._barrier._senders.values())
+            recvs.extend(self._barrier.sharded.shards)
+        for s in senders:
+            out["n_retx"] += getattr(s, "n_retx", 0)
+            out["n_ack_trains"] += getattr(s, "n_ack_trains", 0)
+            out["n_gen_fenced"] += getattr(s, "n_gen_fenced", 0)
+        for r in recvs:
+            out["n_stale_fenced"] += getattr(r, "n_stale_fenced", 0)
+            out["n_stop_resends"] += getattr(r, "n_stop_resends", 0)
+        for sw in self.topo.aggs.values():
+            for k, v in sw.stats().items():
+                if k != "pending":
+                    out[f"agg/{k}"] = out.get(f"agg/{k}", 0) + v
+        return out

@@ -1,0 +1,290 @@
+"""Observability layer (DESIGN.md §12): Tracker backends, the metrics
+registry, Chrome-trace export/validation on a faulted DES run, and the
+tracker="none" bitwise-parity guarantee."""
+import csv
+import json
+import os
+
+import pytest
+
+from repro.config import (
+    LTPConfig,
+    NetConfig,
+    ObservabilityConfig,
+    TrainConfig,
+)
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.tracker import (
+    CompositeTracker,
+    CsvTracker,
+    JsonlTracker,
+    MemoryTracker,
+    make_tracker,
+    read_jsonl,
+)
+from repro.obs.trace import chrome_trace, validate_chrome_trace
+from repro.optim import make_optimizer
+from repro.runtime import (
+    ClusterRuntime,
+    FaultEvent,
+    FaultSchedule,
+    LognormalStragglerCompute,
+)
+
+W = 4
+STEPS = 5
+NET = NetConfig(10, 1, 0.001, 4096)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return build(get_config("papernet").replace(d_model=8, n_layers=3))
+
+
+def _rt(api, *, obs=None, faults=None, policy="bsp", steps=STEPS, w=W,
+        seed=11, **kw):
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    if faults is not None:
+        kw["faults"] = faults
+    return ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), NET,
+        n_workers=w, policy=policy, transport="des",
+        compute_model=LognormalStragglerCompute(
+            w, base=0.05, seed=seed, sigma=0.3,
+            straggler_prob=0.15, straggler_mult=5.0),
+        seed=seed, obs=obs, **kw)
+
+
+def _run(rt, steps=STEPS, w=W):
+    rt.run(batches(SyntheticCIFAR(seed=3), 4 * w, steps))
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# tracker backends
+# ---------------------------------------------------------------------------
+
+
+def test_memory_tracker_captures_and_finishes():
+    t = MemoryTracker()
+    t.log_event({"kind": "apply", "t": 0.1, "step": 0})
+    t.log_metrics({"loss": 1.5}, step=0)
+    t.log_summary({"steps": 1})
+    t.finish()
+    assert t.events[0]["kind"] == "apply"
+    assert t.metrics[0]["loss"] == 1.5 and t.metrics[0]["step"] == 0
+    assert t.summary == {"steps": 1}
+    assert t.finished
+
+
+def test_jsonl_tracker_round_trip(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    with JsonlTracker(path) as t:
+        t.log_event({"kind": "apply", "t": 0.1, "step": 0})
+        t.log_metrics({"loss": 1.5}, step=0)
+        t.log_summary({"steps": 1})
+    recs = read_jsonl(path)
+    kinds = [r.get("kind") for r in recs]
+    assert kinds == ["apply", "metrics", "summary"]
+    assert recs[1]["loss"] == 1.5
+    assert recs[2]["steps"] == 1
+
+
+def test_jsonl_tracker_buffers_until_finish(tmp_path):
+    # lazy-scalar contract: nothing hits disk before finish(), so JAX
+    # scalars finalized in place after the run serialize as floats
+    path = str(tmp_path / "lazy.jsonl")
+    t = JsonlTracker(path)
+    e = {"kind": "apply", "t": 0.1, "loss": None}
+    t.log_event(e)
+    assert not os.path.exists(path) or os.path.getsize(path) == 0
+    e["loss"] = 2.5          # mutate the buffered dict, as the runtime does
+    t.finish()
+    assert read_jsonl(path)[0]["loss"] == 2.5
+
+
+def test_csv_tracker_union_header_and_summary(tmp_path):
+    path = str(tmp_path / "run.csv")
+    with CsvTracker(path) as t:
+        t.log_event({"kind": "apply", "t": 0.1, "step": 0})
+        t.log_event({"kind": "block", "t": 0.2, "worker": 1})
+        t.log_summary({"steps": 1})
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    # union-of-keys header: every record exposes every column
+    assert {"kind", "t", "step", "worker"} <= set(rows[0].keys())
+    assert rows[0]["kind"] == "apply" and rows[1]["worker"] == "1"
+    with open(path + ".summary.json") as f:
+        assert json.load(f) == {"steps": 1}
+
+
+def test_composite_fans_out():
+    a, b = MemoryTracker(), MemoryTracker()
+    c = CompositeTracker([a, b])
+    c.log_event({"kind": "apply", "t": 0.0})
+    c.finish()
+    assert len(a.events) == len(b.events) == 1
+    assert a.finished and b.finished
+
+
+def test_make_tracker_none_and_unknown(tmp_path):
+    assert make_tracker(ObservabilityConfig(tracker="none"), "r") is None
+    assert make_tracker(ObservabilityConfig(tracker=""), "r") is None
+    with pytest.raises(ValueError, match="unknown tracker"):
+        make_tracker(ObservabilityConfig(tracker="bogus"), "r")
+    t = make_tracker(ObservabilityConfig(
+        tracker="memory,jsonl", out_dir=str(tmp_path)), "myrun")
+    assert isinstance(t, CompositeTracker)
+    t.finish()
+    assert os.path.exists(str(tmp_path / "myrun.jsonl"))
+
+
+def test_tensorboard_tracker_optional():
+    pytest.importorskip("tensorboardX")
+    from repro.obs.tracker import TensorBoardTracker  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    c = Counter("n")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = Gauge("g")
+    g.set(2.5)
+    assert g.value == 2.5
+
+
+def test_histogram_exact_stats_and_percentiles():
+    h = Histogram("h", reservoir=8, seed=0)
+    for v in range(100):
+        h.observe(float(v))
+    snap = h.snapshot()
+    # exact regardless of reservoir size
+    assert snap["count"] == 100
+    assert snap["min"] == 0.0 and snap["max"] == 99.0
+    assert snap["mean"] == pytest.approx(49.5)
+    # percentiles come from the 8-sample reservoir: bounded, seeded
+    assert 0.0 <= snap["p50"] <= 99.0
+
+
+def test_histogram_deterministic_under_seed():
+    def fill(seed):
+        h = Histogram("h", reservoir=4, seed=seed)
+        for v in range(50):
+            h.observe(float(v))
+        return h.snapshot()
+    assert fill(7) == fill(7)
+
+
+def test_registry_absorb_and_snapshot():
+    reg = MetricsRegistry(reservoir=16, seed=0)
+    reg.counter("a").inc(3)
+    reg.histogram("h").observe(1.0)
+    reg.absorb("flow", {"n_retx": 2, "n_ack_trains": 10})
+    reg.absorb("flow", {"n_retx": 5, "n_ack_trains": 11})  # cumulative SET
+    snap = reg.snapshot()
+    assert snap["a"] == 3
+    assert snap["flow/n_retx"] == 5
+    assert snap["flow/n_ack_trains"] == 11
+    assert snap["h/count"] == 1
+    # get-or-create returns the same instrument
+    assert reg.counter("a") is reg.counter("a")
+
+
+# ---------------------------------------------------------------------------
+# chrome trace — acceptance criterion: faulted DES run exports a
+# Perfetto-loadable trace that passes schema validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def faulted_rt(api):
+    faults = FaultSchedule([
+        FaultEvent(0.08, "worker_crash", W - 1),
+        FaultEvent(0.30, "ps_fail", 0, recover_s=0.02),
+        FaultEvent(0.60, "worker_join", W - 1),
+    ])
+    rt = _rt(api, obs=ObservabilityConfig(tracker="memory"),
+             faults=faults, steps=6, checkpoint_every_s=0.1)
+    return _run(rt, steps=6)
+
+
+def test_faulted_trace_validates(faulted_rt, tmp_path):
+    path = str(tmp_path / "trace.json")
+    doc = faulted_rt.export_trace(path)
+    with open(path) as f:
+        loaded = json.load(f)          # the artifact itself must parse
+    problems = validate_chrome_trace(
+        loaded, n_workers=W, n_ps=faulted_rt.n_ps,
+        require_fault_markers=True)
+    assert problems == [], problems
+    assert doc["traceEvents"]          # and the in-memory doc matches
+    phs = {e["ph"] for e in loaded["traceEvents"]}
+    assert {"X", "i", "M", "C"} <= phs
+
+
+def test_trace_has_fault_and_failover_markers(faulted_rt):
+    doc = chrome_trace(faulted_rt.tel.events, n_workers=W,
+                       n_ps=faulted_rt.n_ps)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert any(n.startswith("fault:") for n in names)
+    assert "ps_failover" in names
+    assert "checkpoint" in names
+
+
+def test_trace_spans_non_negative_and_metadata_complete(faulted_rt):
+    doc = chrome_trace(faulted_rt.tel.events, n_workers=W,
+                       n_ps=faulted_rt.n_ps)
+    for e in doc["traceEvents"]:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0, e
+    thread_meta = [e for e in doc["traceEvents"]
+                   if e["ph"] == "M" and e["name"] == "thread_name"]
+    # a track per worker on both the worker and transport processes
+    assert len([m for m in thread_meta if m["pid"] == 1]) >= W
+    assert len([m for m in thread_meta if m["pid"] == 2]) >= W
+
+
+def test_tracker_run_populates_metrics_and_summary(faulted_rt):
+    mem = faulted_rt.tracker
+    assert mem.finished
+    assert len(mem.events) == len(faulted_rt.tel.events)
+    assert len(mem.metrics) == 6            # one per step
+    s = mem.summary
+    assert s["n_faults"] == 3 and s["n_failovers"] == 1
+    # registry scalars rode along: sim perf + flow counters
+    assert "sim/events" in s and "flow/n_retx" in s
+    assert "worker/compute_s/count" in s
+
+
+# ---------------------------------------------------------------------------
+# tracker="none" bitwise parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _strip_trunks(events):
+    out = []
+    for e in events:
+        if e["kind"] == "queue" and "trunks" in e:
+            e = {k: v for k, v in e.items() if k != "trunks"}
+        out.append(e)
+    return out
+
+
+def test_tracker_none_bitwise_parity(api):
+    base = _run(_rt(api, obs=None))
+    obs = _run(_rt(api, obs=ObservabilityConfig(tracker="memory")))
+    assert base.history == obs.history
+    # event streams identical modulo the trunks field the sampler adds
+    # only on the tracker-active arm
+    assert base.tel.events == _strip_trunks(obs.tel.events)
+    assert base.tel.summary() == {
+        k: v for k, v in obs.tel.summary().items()}

@@ -1,0 +1,145 @@
+"""Telemetry façade unit coverage (DESIGN.md §8/§12): the per-kind
+index behind ``of()``, ``blocked_seconds()`` edge cases, the
+fault-scalar summary rules, and the Tracker sink hook."""
+import pytest
+
+from repro.obs.tracker import MemoryTracker
+from repro.runtime.telemetry import Telemetry
+
+
+def _tel(events):
+    t = Telemetry()
+    for kind, ts, fields in events:
+        t.record(kind, ts, **fields)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# of() — per-kind index
+# ---------------------------------------------------------------------------
+
+
+def test_of_matches_stream_order_and_filter():
+    t = _tel([("block", 0.1, {"worker": 0}),
+              ("apply", 0.2, {"step": 0}),
+              ("block", 0.3, {"worker": 1}),
+              ("unblock", 0.4, {"worker": 0})])
+    assert t.of("block") == [e for e in t.events if e["kind"] == "block"]
+    assert [e["t"] for e in t.of("block")] == [0.1, 0.3]
+    assert t.of("nonexistent") == []
+
+
+def test_of_returns_fresh_list():
+    t = _tel([("apply", 0.1, {"step": 0})])
+    got = t.of("apply")
+    got.clear()
+    assert len(t.of("apply")) == 1          # index not corrupted
+    # the dicts themselves ARE shared (finalization mutates in place)
+    assert t.of("apply")[0] is t.events[0]
+
+
+def test_record_disabled_keeps_index_empty():
+    t = Telemetry(enabled=False)
+    t.record("apply", 0.1, step=0)
+    assert t.events == [] and t.of("apply") == []
+
+
+# ---------------------------------------------------------------------------
+# blocked_seconds() edge cases (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_blocked_empty_stream():
+    assert Telemetry().blocked_seconds() == 0.0
+
+
+def test_blocked_unmatched_block_counts_to_stream_end():
+    t = _tel([("block", 1.0, {"worker": 0}),
+              ("apply", 3.5, {"step": 0})])
+    assert t.blocked_seconds() == pytest.approx(2.5)
+
+
+def test_blocked_duplicate_block_keeps_first_timestamp():
+    # the setdefault path: a second block for an already-blocked worker
+    # must not restart its interval
+    t = _tel([("block", 1.0, {"worker": 0}),
+              ("block", 2.0, {"worker": 0}),
+              ("unblock", 3.0, {"worker": 0})])
+    assert t.blocked_seconds() == pytest.approx(2.0)
+
+
+def test_blocked_unmatched_unblock_ignored():
+    t = _tel([("unblock", 1.0, {"worker": 0}),
+              ("apply", 2.0, {"step": 0})])
+    assert t.blocked_seconds() == 0.0
+
+
+def test_blocked_interleaved_multi_worker_pairs():
+    # w0: [1, 4], w1: [2, 3] interleaved; w2 left open until t_end=5
+    t = _tel([("block", 1.0, {"worker": 0}),
+              ("block", 2.0, {"worker": 1}),
+              ("unblock", 3.0, {"worker": 1}),
+              ("unblock", 4.0, {"worker": 0}),
+              ("block", 4.5, {"worker": 2}),
+              ("apply", 5.0, {"step": 0})])
+    assert t.blocked_seconds() == pytest.approx(3.0 + 1.0 + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# summary() fault scalars (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_summary_manual_failover_without_fault_event():
+    # a manually driven failover/tear (no injected FaultEvent) must not
+    # silently drop its scalars
+    t = _tel([("ps_failover", 0.2, {"ps": 0, "step": 1, "n_hist": 1}),
+              ("flow_torn", 0.3, {"worker": 1, "iteration": 2})])
+    s = t.summary()
+    assert s["n_failovers"] == 1
+    assert s["n_flow_torn"] == 1
+    assert "n_faults" not in s          # no injected fault happened
+    assert "n_ps_lost" not in s         # nothing lost, key absent
+
+
+def test_summary_fault_run_carries_full_key_set():
+    # record-for-record parity with the pre-façade summary: a faulted
+    # run emits every fault scalar, zeros included
+    t = _tel([("fault", 0.1, {"fault": "worker_crash", "target": 0})])
+    s = t.summary()
+    assert s["n_faults"] == 1
+    for key in ("n_flow_torn", "n_ps_lost", "n_failovers",
+                "n_checkpoints"):
+        assert s[key] == 0
+
+
+def test_summary_zero_fault_run_has_no_fault_keys():
+    t = _tel([("apply", 0.1, {"step": 0, "n_grads": 4, "staleness_max": 0,
+                              "staleness_mean": 0.0, "loss": 1.0})])
+    s = t.summary()
+    assert not any(k in s for k in
+                   ("n_faults", "n_flow_torn", "n_ps_lost",
+                    "n_failovers", "n_checkpoints"))
+
+
+# ---------------------------------------------------------------------------
+# tracker sink
+# ---------------------------------------------------------------------------
+
+
+def test_record_forwards_to_tracker():
+    mem = MemoryTracker()
+    t = Telemetry(tracker=mem)
+    t.record("apply", 0.1, step=0)
+    t.record("block", 0.2, worker=1)
+    assert [e["kind"] for e in mem.events] == ["apply", "block"]
+
+
+def test_attach_replays_prefix():
+    t = _tel([("apply", 0.1, {"step": 0}),
+              ("block", 0.2, {"worker": 0})])
+    mem = MemoryTracker()
+    t.attach(mem)
+    assert len(mem.events) == 2
+    t.record("unblock", 0.3, worker=0)
+    assert len(mem.events) == 3

@@ -98,6 +98,23 @@ CEILINGS: Dict[str, float] = {
 }
 
 
+def replint_gate() -> List[str]:
+    """The invariant linter (DESIGN.md §13) must report zero findings on
+    ``src/`` — a perf record produced from a tree with un-pragma'd
+    determinism/hygiene violations is not trustworthy as a baseline.
+    Skips (empty) when the repo layout is not importable here."""
+    try:
+        from repro.devtools.replint import lint_paths
+    except ImportError:
+        return []
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    if not os.path.isdir(src):
+        return []
+    findings, _n = lint_paths([src])
+    return [f"replint: {f.render()}" for f in findings]
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
@@ -213,7 +230,7 @@ def main(argv=None) -> int:
         print(f"refusing non-root record names {bad}: the gate compares "
               f"committed BENCH_*.json roots only", file=sys.stderr)
         return 2
-    all_failures = []
+    all_failures = replint_gate()
     for name in files:
         base_path = os.path.join(args.baseline_dir, name)
         cur_path = os.path.join(args.current_dir, name)

@@ -89,7 +89,7 @@ class ModelConfig:
         reps = (self.n_layers + len(self.block_pattern) - 1) // len(self.block_pattern)
         return (self.block_pattern * reps)[: self.n_layers]
 
-    def replace(self, **kw) -> "ModelConfig":
+    def replace(self, **kw: Any) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
 
 

@@ -1,0 +1,6 @@
+"""Developer tooling that ships with the repo but never imports from
+(or into) the simulation fast path.
+
+``repro.devtools.replint`` is the AST-based invariant linter
+(DESIGN.md §13); it is pure stdlib and safe to run anywhere.
+"""

@@ -19,6 +19,7 @@ from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.net.genfence import GEN_KEY, gen_of, has_gen
 from repro.net.simcore import Packet, Sim, TrainItems
 
 
@@ -33,7 +34,9 @@ class LTPFlowReceiver:
     def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
         self.sim = sim
         self.send_ack = send_ack
-        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
+        # transport wiring, attached once per pooled life from outside —
+        # reset() deliberately leaves it alone
+        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None  # replint: ok(pool-reset)
         self.flow = flow
         self.received: Set[int] = set()
         self.reset()
@@ -62,6 +65,7 @@ class LTPFlowReceiver:
         need = np.flatnonzero(self.critical)
         return all(int(s) in self.received for s in need)
 
+    # replint: hotpath
     def _ack_for(self, pkt: Packet, t: float) -> Packet:
         """Per-packet bookkeeping (reg metadata / received set / t_start /
         t_full at the packet's true arrival ``t``) -> the ACK to send.
@@ -75,8 +79,8 @@ class LTPFlowReceiver:
             # echo the sender's flow generation so a pooled sender can
             # tell this reg-ack from one aimed at a previous life
             ack = Packet(self.flow, -1, 41, kind="ack",
-                         meta={"g": pkt.meta.get("g")}
-                         if "g" in pkt.meta else {})
+                         meta={GEN_KEY: gen_of(pkt.meta)}
+                         if has_gen(pkt.meta) else {})
         else:
             self.received.add(pkt.seq)
             ack = Packet(self.flow, pkt.seq, 41, kind="ack",
@@ -87,6 +91,7 @@ class LTPFlowReceiver:
             self.t_full = t
         return ack
 
+    # replint: hotpath
     def on_data(self, pkt: Packet, notify: Callable[[], None]):
         if self.closed:
             return
@@ -112,7 +117,8 @@ class LTPFlowReceiver:
         if self.n is None:
             return np.zeros(0, bool)
         mask = np.zeros(self.n, bool)
-        for s in self.received:
+        # iteration order is irrelevant: each element sets one mask cell
+        for s in self.received:  # replint: ok(determinism)
             if 0 <= s < self.n:
                 mask[s] = True
         return mask
@@ -150,7 +156,9 @@ class PSGatherReceiver:
         self.pct_threshold = pct_threshold
         self.send_stop = send_stop
         self.on_close = on_close
-        self.flows: Dict[int, LTPFlowReceiver] = {}
+        # per-flow receiver map: reset() re-initializes every value in
+        # place (the map itself is the pooled wiring, keyed by flow id)
+        self.flows: Dict[int, LTPFlowReceiver] = {}  # replint: ok(pool-reset)
         self.gen = 0
         #: pooled-transport hook, called as ``on_stale(flow, gen)`` when
         #: data from an older flow generation arrives: the transport
@@ -158,7 +166,7 @@ class PSGatherReceiver:
         #: generation (its original stop was lost in flight) — without
         #: this a recycled gather would silently drop the straggler's
         #: retransmissions and the orphan would pump forever.
-        self.on_stale: Optional[Callable[[int, int], None]] = None
+        self.on_stale: Optional[Callable[[int, int], None]] = None  # replint: ok(pool-reset)
         self._check_eids: List[int] = []
         #: flows abandoned mid-gather (node death, DESIGN.md §10): their
         #: receivers are closed, they are excluded from the close rule,
@@ -167,8 +175,8 @@ class PSGatherReceiver:
         self._dead: Set[int] = set()
         # observability counters (DESIGN.md §12) — cumulative across the
         # pooled gather's lives: initialized here, NOT cleared by reset()
-        self.n_stale_fenced = 0   # data packets fenced by the generation gate
-        self.n_stop_resends = 0   # stops re-sent on post-close arrivals
+        self.n_stale_fenced = 0   # replint: ok(pool-reset)
+        self.n_stop_resends = 0   # replint: ok(pool-reset)
         for f in flows:
             self.flows[f] = LTPFlowReceiver(sim, lambda p: None, f)
         self.reset()
@@ -219,7 +227,7 @@ class PSGatherReceiver:
             self.gen = gen
 
     def _stale(self, pkt: Packet) -> bool:
-        g = pkt.meta.get("g") if isinstance(pkt.meta, dict) else None
+        g = gen_of(pkt.meta)
         return g is not None and g != self.gen
 
     def attach_ack(self, flow: int, send_ack: Callable[[Packet], None]):
@@ -236,7 +244,7 @@ class PSGatherReceiver:
         if self._stale(pkt):
             self.n_stale_fenced += 1
             if self.on_stale is not None:
-                self.on_stale(pkt.flow, pkt.meta.get("g"))
+                self.on_stale(pkt.flow, gen_of(pkt.meta))
             return
         if self.closed:
             # data after close means the flow's "stop" was lost in flight:
@@ -251,7 +259,7 @@ class PSGatherReceiver:
         """Coalesced delivery: all packets in a train share one event time,
         so the close rule is evaluated once after the whole train (identical
         to per-packet evaluation at equal ``sim.now``)."""
-        stale = [(p.flow, p.meta.get("g")) for p, _ in items
+        stale = [(p.flow, gen_of(p.meta)) for p, _ in items
                  if self._stale(p)]
         if stale:
             self.n_stale_fenced += len(stale)
@@ -262,7 +270,9 @@ class PSGatherReceiver:
         if not items:
             return
         if self.closed:
-            for flow in {p.flow for p, _ in items}:
+            # sorted so stop-resend order never depends on set hashing
+            # (same-seed replays must schedule identical event sequences)
+            for flow in sorted({p.flow for p, _ in items}):
                 if flow in self.flows:
                     self.n_stop_resends += 1
                     self.send_stop(flow)

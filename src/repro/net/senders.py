@@ -32,6 +32,7 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.net.genfence import GEN_KEY, echo_stale, gen_of, is_stale
 from repro.net.simcore import Packet, Pipe, Sim, TrainItems
 
 MSS = 1460          # TCP payload bytes per packet
@@ -135,7 +136,8 @@ class TcpReceiver:
     def __init__(self, sim: Sim, send_ack: Callable[[Packet], None], flow: int):
         self.sim = sim
         self.send_ack = send_ack
-        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None
+        # transport wiring, attached once from outside; reset() keeps it
+        self.send_ack_train: Optional[Callable[[List[Packet]], None]] = None  # replint: ok(pool-reset)
         self.flow = flow
         self.received: Set[int] = set()
         self.gen = 0
@@ -152,9 +154,10 @@ class TcpReceiver:
         self.n_total: Optional[int] = n_total
 
     def _stale(self, pkt: Packet) -> bool:
-        g = pkt.meta.get("g") if isinstance(pkt.meta, dict) else None
+        g = gen_of(pkt.meta)
         return g is not None and g != self.gen
 
+    # replint: hotpath
     def _ack_for(self, pkt: Packet) -> Packet:
         if pkt.kind == "reg":
             self.n_total = pkt.meta["n"]
@@ -205,7 +208,8 @@ class _TcpBase:
         self.sim = sim
         self.pipe = pipe
         self.deliver = deliver
-        self.deliver_train: Optional[Callable[[TrainItems], None]] = None
+        # transport wiring, attached once from outside; reset() keeps it
+        self.deliver_train: Optional[Callable[[TrainItems], None]] = None  # replint: ok(pool-reset)
         self.train_len = max(1, int(train_len))
         self.n = n_packets
         self.flow = flow
@@ -334,9 +338,10 @@ class _TcpBase:
         self.inflight.discard(s)
         self.retx.append(s)
 
+    # replint: hotpath
     def _send(self, seq: int):
         pkt = Packet(self.flow, seq, self.mss, kind="data",
-                     meta={"t": self.sim.now, "g": self.gen})
+                     meta={"t": self.sim.now, GEN_KEY: self.gen})
         self.inflight.add(seq)
         self.sent_time[seq] = self.sim.now
         if self._train_buf is not None:
@@ -348,7 +353,10 @@ class _TcpBase:
         """Expire inflight entries older than RTO (silent queue drops would
         otherwise pin the window shut)."""
         cutoff = self.sim.now - self.rto
-        stale = [s for s in self.inflight if self.sent_time.get(s, 0) < cutoff]
+        # sorted so the retransmit queue fills in seq order, not set-hash
+        # order (bitwise same-seed replay must not depend on set history)
+        stale = sorted(s for s in self.inflight
+                       if self.sent_time.get(s, 0) < cutoff)
         for s in stale:
             self.inflight.discard(s)
             if s >= self.cum and s not in self.sacked and s not in self.retx:
@@ -369,6 +377,7 @@ class _TcpBase:
             return
         self._pump_window()
 
+    # replint: hotpath
     def _pump_window(self):
         while len(self.inflight) < int(self.cwnd):
             if self.retx:
@@ -386,7 +395,7 @@ class _TcpBase:
         if self.done:
             return
         echo = pkt.meta.get("echo") or {}
-        if echo.get("g", self.gen) != self.gen:
+        if echo_stale(echo, self.gen):
             return          # ACK for a previous life of this pooled flow
         cum = pkt.meta["cum"]
         if "t" in echo:
@@ -584,7 +593,7 @@ class BBRSender(_TcpBase):
 
     def on_ack(self, pkt: Packet):
         echo = pkt.meta.get("echo") or {}
-        if echo.get("g", self.gen) != self.gen:
+        if echo_stale(echo, self.gen):
             return          # ACK for a previous life of this pooled flow
         if "t" in echo:
             self.est.on_ack(self.mss, self.sim.now - echo["t"])
@@ -620,7 +629,8 @@ class LTPSender:
         self.sim = sim
         self.pipe = pipe
         self.deliver = deliver
-        self.deliver_train: Optional[Callable[[TrainItems], None]] = None
+        # transport wiring, attached once from outside; reset() keeps it
+        self.deliver_train: Optional[Callable[[TrainItems], None]] = None  # replint: ok(pool-reset)
         self.train_len = max(1, int(train_len))
         self.n = n_packets
         self.flow = flow
@@ -647,9 +657,9 @@ class LTPSender:
         self.pacing_timer: Optional[int] = None
         # observability counters (DESIGN.md §12) — cumulative across the
         # pooled flow's lives: initialized here, NOT cleared by reset()
-        self.n_retx = 0         # packets requeued after detected loss
-        self.n_ack_trains = 0   # coalesced ACK trains consumed
-        self.n_gen_fenced = 0   # ACKs/stops dropped by the generation fence
+        self.n_retx = 0         # replint: ok(pool-reset)
+        self.n_ack_trains = 0   # replint: ok(pool-reset)
+        self.n_gen_fenced = 0   # replint: ok(pool-reset)
         self.reset()
 
     def reset(self, gen: Optional[int] = None) -> None:
@@ -719,7 +729,8 @@ class LTPSender:
         if self.reg_acked or self.done:
             return
         reg = Packet(self.flow, -1, 64, kind="reg",
-                     meta={"n": self.n, "t": self.sim.now, "g": self.gen,
+                     meta={"n": self.n, "t": self.sim.now,
+                           GEN_KEY: self.gen,
                            "critical": self.critical})
         self.pipe.send(reg, self.deliver)
         self.sim.after(max(3 * self.est.rtprop, 5e-3)
@@ -787,6 +798,7 @@ class LTPSender:
             self._phase_start = self.sim.now
         return self.GAINS[getattr(self, "_phase", 0)]
 
+    # replint: hotpath
     def _next_packet(self) -> Optional[Packet]:
         seq = self._next_seq()
         if seq is None:
@@ -798,7 +810,8 @@ class LTPSender:
         self.total_sent += 1
         return Packet(self.flow, seq, self.payload, kind="data",
                       critical=bool(self.critical[seq]),
-                      meta={"t": self.sim.now, "order": order, "g": self.gen})
+                      meta={"t": self.sim.now, "order": order,
+                            GEN_KEY: self.gen})
 
     def _pump(self):
         if self.done or self.stopped:
@@ -845,8 +858,7 @@ class LTPSender:
         if self.done:
             return
         if pkt.kind == "stop":
-            if isinstance(pkt.meta, dict) and \
-                    pkt.meta.get("g", self.gen) != self.gen:
+            if is_stale(pkt.meta, self.gen):
                 self.n_gen_fenced += 1
                 return      # stop aimed at a previous life of this flow
             self.stopped = True
@@ -858,8 +870,7 @@ class LTPSender:
             return
         seq = pkt.seq
         if seq == -1:           # registration ack
-            if isinstance(pkt.meta, dict) and \
-                    pkt.meta.get("g", self.gen) != self.gen:
+            if is_stale(pkt.meta, self.gen):
                 self.n_gen_fenced += 1
                 return
             self.reg_acked = True
@@ -867,7 +878,7 @@ class LTPSender:
                 self._finish()  # data completed while the reg was in flight
             return
         echo = pkt.meta.get("echo") or {}
-        if echo.get("g", self.gen) != self.gen:
+        if echo_stale(echo, self.gen):
             self.n_gen_fenced += 1
             return          # ACK for a previous life of this pooled flow
         if "t" in echo:
@@ -939,14 +950,13 @@ class LTPSender:
                     return
                 continue                # stale stop: keep consuming
             if pkt.seq == -1:
-                if isinstance(pkt.meta, dict) and \
-                        pkt.meta.get("g", self.gen) != self.gen:
+                if is_stale(pkt.meta, self.gen):
                     self.n_gen_fenced += 1
                     continue
                 self.reg_acked = True
                 continue
             echo = pkt.meta.get("echo") or {}
-            if echo.get("g", self.gen) != self.gen:
+            if echo_stale(echo, self.gen):
                 self.n_gen_fenced += 1
                 continue    # ACK for a previous life of this pooled flow
             if "t" in echo:

@@ -59,7 +59,7 @@ class PerfCounters:
 
     __slots__ = ("events", "packets")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.reset()
 
     def reset(self) -> None:
@@ -119,7 +119,7 @@ class Sim:
     _CAL_EVERY = 512     # pops between bucket-width recalibrations
     _ADV_EVERY = 8192    # empty-bucket advances that force a recalibration
 
-    def __init__(self, engine: Optional[str] = None):
+    def __init__(self, engine: Optional[str] = None) -> None:
         engine = DEFAULT_ENGINE if engine is None else engine
         if engine not in ("calendar", "heap"):
             raise ValueError(f"unknown Sim engine {engine!r}; "
@@ -147,6 +147,7 @@ class Sim:
             self._wheel = None
 
     # -- scheduling ---------------------------------------------------------
+    # replint: hotpath
     def at(self, t: float, fn: Callable[[], None]) -> int:
         eid = next(self._ids)
         if t < self.now:
@@ -185,7 +186,8 @@ class Sim:
         return near + len(self._heap)
 
     # -- calendar internals -------------------------------------------------
-    def _place(self, t: float, eid: int, fn, clamp: bool = False) -> None:
+    def _place(self, t: float, eid: int, fn: Callable[[], None],
+               clamp: bool = False) -> None:
         # relative slot via the epoch's single monotone map: float
         # rounding at a bucket boundary cannot reorder two events
         a = int((t - self._org) * self._inv) - self._k
@@ -255,25 +257,28 @@ class Sim:
         the first tick immediately as a sim event (the runtime's
         checkpoint grid anchors its t=0 snapshot this way).
         Returns a zero-argument canceller."""
-        state = {"eid": None, "stopped": False}
+        eid: Optional[int] = None
+        stopped = False
 
-        def tick():
-            if state["stopped"] or self.now > until:
+        def tick() -> None:
+            nonlocal eid
+            if stopped or self.now > until:
                 return
             fn()
-            state["eid"] = self.after(dt, tick)
+            eid = self.after(dt, tick)
 
-        state["eid"] = (self.after(dt, tick) if start is None
-                        else self.at(start, tick))
+        eid = self.after(dt, tick) if start is None else self.at(start, tick)
 
-        def cancel_hook():
-            state["stopped"] = True
-            if state["eid"] is not None:
-                self.cancel(state["eid"])
+        def cancel_hook() -> None:
+            nonlocal stopped
+            stopped = True
+            if eid is not None:
+                self.cancel(eid)
 
         return cancel_hook
 
-    def run(self, until: float = float("inf"), max_events: int = 100_000_000):
+    def run(self, until: float = float("inf"),
+            max_events: int = 100_000_000) -> int:
         if self._wheel is None:
             n = self._run_heap(until, max_events)
         else:
@@ -380,7 +385,7 @@ class Pipe:
         queue_pkts: int = 256,
         rng: Optional[np.random.Generator] = None,
         overhead: int = 0,
-    ):
+    ) -> None:
         self.sim = sim
         self.rate = rate_bps
         self.delay = delay
@@ -403,6 +408,7 @@ class Pipe:
         channels between iterations; cumulative counters are kept)."""
         self.busy_until = 0.0
 
+    # replint: hotpath
     def send(self, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
         """Returns False if droptail-dropped at enqueue."""
         if self.queue_len() >= self.cap:
@@ -517,7 +523,7 @@ class Route:
     identically to using the pipe directly.
     """
 
-    def __init__(self, pipes: Sequence[Pipe]):
+    def __init__(self, pipes: Sequence[Pipe]) -> None:
         if not pipes:
             raise ValueError("Route needs at least one pipe")
         self.pipes = list(pipes)
@@ -540,11 +546,13 @@ class Route:
         times as that hop's enqueue times — still one event per hop."""
         return self._hop_train(0, list(pkts), deliver_train, t_ready)
 
-    def _hop_train(self, i: int, pkts, deliver_train, t_ready) -> int:
+    def _hop_train(self, i: int, pkts: List[Packet],
+                   deliver_train: Callable[[TrainItems], None],
+                   t_ready: Optional[Sequence[float]]) -> int:
         if i == len(self.pipes) - 1:
             return self.pipes[i].send_train(pkts, deliver_train, t_ready)
 
-        def relay(items, i=i):
+        def relay(items: TrainItems, i: int = i) -> None:
             self._hop_train(i + 1, [p for p, _ in items], deliver_train,
                             [t for _, t in items])
 
@@ -566,7 +574,7 @@ class Topology:
     helpers + aggregate statistics; the event loop stays in ``Sim``.
     """
 
-    def __init__(self, sim: Sim):
+    def __init__(self, sim: Sim) -> None:
         self.sim = sim
         self.pipes: Dict[str, Pipe] = {}
         self.groups: Dict[str, List[str]] = {}
@@ -623,7 +631,8 @@ class CrossTrafficSource:
                  rng: Optional[np.random.Generator] = None,
                  pkt_bytes: int = 1500,
                  on_mean: float = 10e-3, off_mean: float = 10e-3,
-                 duty: Optional[float] = None, train_len: int = 1):
+                 duty: Optional[float] = None,
+                 train_len: int = 1) -> None:
         self.sim = sim
         self.pipe = pipe
         self.load = float(load)

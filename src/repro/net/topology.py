@@ -190,7 +190,7 @@ class Topology(GatherSpec):
 # ----------------------------------------------------------------------------
 
 
-def flat(n_ps: int = 1, **kw) -> Topology:
+def flat(n_ps: int = 1, **kw: Any) -> Topology:
     """The paper's topology: workers behind one shared trunk per PS
     shard. Extra ``GatherSpec`` fields (heterogeneous access links,
     cross traffic) pass through as keywords."""
@@ -200,14 +200,15 @@ def flat(n_ps: int = 1, **kw) -> Topology:
                     **kw)
 
 
-def multi_ps(n_ps: int, **kw) -> Topology:
+def multi_ps(n_ps: int, **kw: Any) -> Topology:
     """Flat sharded gather: n_ps parameter servers, one trunk each."""
     return flat(n_ps=n_ps, **kw)
 
 
 def rack_spine(racks: int, workers_per_rack: int, *, oversub: float = 4.0,
                n_ps: int = 1, ps_racks: Optional[Tuple[int, ...]] = None,
-               agg: bool = True, agg_hold_ms: float = 0.0, **kw) -> Topology:
+               agg: bool = True, agg_hold_ms: float = 0.0,
+               **kw: Any) -> Topology:
     """Two-tier rack/spine fabric (DESIGN.md §11).
 
     ``oversub`` is the ToR uplink oversubscription ratio (uplink rate =

@@ -31,10 +31,11 @@ class Counter:
 
     __slots__ = ("name", "value")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value = 0
 
+    # replint: hotpath
     def inc(self, n: int = 1) -> None:
         self.value += n
 
@@ -44,10 +45,11 @@ class Gauge:
 
     __slots__ = ("name", "value")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value = 0.0
 
+    # replint: hotpath
     def set(self, v: float) -> None:
         self.value = v
 
@@ -64,7 +66,8 @@ class Histogram:
     __slots__ = ("name", "reservoir", "samples", "count", "total",
                  "vmin", "vmax", "_rng")
 
-    def __init__(self, name: str, reservoir: int = 1024, seed: int = 0):
+    def __init__(self, name: str, reservoir: int = 1024,
+                 seed: int = 0) -> None:
         if reservoir < 1:
             raise ValueError("reservoir must be >= 1")
         self.name = name
@@ -77,6 +80,7 @@ class Histogram:
         # stdlib RNG: ~3x cheaper than a numpy Generator for scalar draws
         self._rng = random.Random(seed)
 
+    # replint: hotpath
     def observe(self, v: float) -> None:
         v = float(v)
         self.count += 1
@@ -117,7 +121,7 @@ class MetricsRegistry:
     external stats dict (``AggSwitch.stats()``, ``PERF.snapshot()``,
     transport flow stats) into counters/gauges in one call."""
 
-    def __init__(self, reservoir: int = 1024, seed: int = 0):
+    def __init__(self, reservoir: int = 1024, seed: int = 0) -> None:
         self._reservoir = reservoir
         self._seed = seed
         self.counters: Dict[str, Counter] = {}

@@ -238,7 +238,7 @@ def chrome_trace(events: Iterable[dict], *, n_workers: Optional[int] = None,
 
 
 def write_chrome_trace(path: str, events: Iterable[dict],
-                       **kw) -> Dict[str, Any]:
+                       **kw: Any) -> Dict[str, Any]:
     doc = chrome_trace(events, **kw)
     with open(path, "w") as f:
         json.dump(doc, f)

@@ -36,13 +36,16 @@ import csv
 import io
 import json
 import os
-from typing import Any, Dict, List, Mapping, Optional, Sequence
+from typing import TYPE_CHECKING, Any, Dict, List, Mapping, Optional, Sequence
+
+if TYPE_CHECKING:
+    from repro.config import ObservabilityConfig
 
 #: backend names ``make_tracker`` accepts (comma-compose for fan-out).
 TRACKER_BACKENDS = ("none", "memory", "jsonl", "csv", "tensorboard")
 
 
-def _json_default(v: Any):
+def _json_default(v: Any) -> Any:
     """Last-resort encoder for event payloads: numpy/jax scalars become
     floats, everything else a string — serialization must never throw
     after a run completed."""
@@ -77,7 +80,7 @@ class Tracker(abc.ABC):
     def __enter__(self) -> "Tracker":
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: Any) -> None:
         self.finish()
 
 
@@ -104,7 +107,7 @@ class MemoryTracker(Tracker):
 
     name = "memory"
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.events: List[Dict[str, Any]] = []
         self.metrics: List[Dict[str, Any]] = []
         self.summary: Dict[str, Any] = {}
@@ -134,7 +137,7 @@ class _BufferedFileTracker(Tracker):
     mid-run flush would both block the event loop and serialize
     unforced device values (DESIGN.md §9/§12)."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str) -> None:
         self.path = path
         self._events: List[Mapping[str, Any]] = []
         self._metrics: List[Dict[str, Any]] = []
@@ -218,7 +221,7 @@ class CompositeTracker(Tracker):
 
     name = "composite"
 
-    def __init__(self, children: Sequence[Tracker]):
+    def __init__(self, children: Sequence[Tracker]) -> None:
         self.children = list(children)
 
     def log_event(self, event: Mapping[str, Any]) -> None:
@@ -247,7 +250,7 @@ class TensorBoardTracker(Tracker):
 
     name = "tensorboard"
 
-    def __init__(self, log_dir: str):
+    def __init__(self, log_dir: str) -> None:
         writer_cls = None
         for mod, attr in (("tensorboardX", "SummaryWriter"),
                           ("torch.utils.tensorboard", "SummaryWriter")):
@@ -282,7 +285,8 @@ class TensorBoardTracker(Tracker):
         self._writer.close()
 
 
-def make_tracker(cfg, run_name: str = "run") -> Optional[Tracker]:
+def make_tracker(cfg: "ObservabilityConfig",
+                 run_name: str = "run") -> Optional[Tracker]:
     """Build the tracker an ``ObservabilityConfig`` selects.
 
     ``cfg.tracker`` is a backend name or a comma-separated list (the
@@ -318,7 +322,7 @@ def make_tracker(cfg, run_name: str = "run") -> Optional[Tracker]:
 def read_jsonl(path: str) -> List[Dict[str, Any]]:
     """Load a ``JsonlTracker`` file back into a list of dicts (tests,
     ad-hoc analysis)."""
-    out = []
+    out: List[Dict[str, Any]] = []
     with io.open(path) as f:
         for line in f:
             line = line.strip()

@@ -237,7 +237,8 @@ class SSPPolicy(AggregationPolicy):
         self._stale: List[PendingGrad] = []
 
     def may_start(self, worker: int, iteration: int) -> bool:
-        clocks = [self._clock[wk] for wk in self.active
+        # membership-set order is irrelevant: only min(clocks) is used
+        clocks = [self._clock[wk] for wk in self.active  # replint: ok(determinism)
                   if wk in self._clock]
         if not clocks:
             clocks = [self._clock.get(worker, 0)]
@@ -255,7 +256,7 @@ class SSPPolicy(AggregationPolicy):
         if new:
             cur = max((self._clock.get(wk, 0) for wk in self.active),
                       default=0)
-            for wk in new:
+            for wk in sorted(new):
                 self._clock[wk] = max(self._clock.get(wk, 0), cur)
 
     def on_arrival(self, g: PendingGrad) -> None:

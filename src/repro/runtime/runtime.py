@@ -430,11 +430,14 @@ class ClusterRuntime:
         else:
             # reliable protocols: independent flows; the barrier closes
             # when the last byte of the last member's flow lands
+            # staleness guard lives in _bsp_reliable_check (``rnd is not
+            # self._bsp_round`` → return); marking a dead round's
+            # flows_done set first is harmless, the object is garbage.
             def on_flow(masks_ps, frac, early, rnd=rnd, worker=worker):
                 rnd.flows_done.add(worker)
                 self._bsp_reliable_check(rnd)
 
-            self.net_des.send(worker, on_flow)
+            self.net_des.send(worker, on_flow)  # replint: ok(gen-fence)
 
     def _bsp_reliable_check(self, rnd: _BSPRound) -> None:
         if rnd is not self._bsp_round or not rnd.members \

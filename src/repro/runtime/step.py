@@ -70,7 +70,9 @@ def build_fused_step(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
       step(params, opt_state, residual, batch, masks, frac, lr)
         -> (params, opt_state, residual, mean_loss, realized_frac)
     """
-    key = ("fused", id(api), id(opt), ltp, _plan_key(plan), w, protocol)
+    # id() keys a process-local jit cache only (api/opt objects are
+    # unhashable); cache identity never touches the replayed sim state.
+    key = ("fused", id(api), id(opt), ltp, _plan_key(plan), w, protocol)  # replint: ok(determinism)
     return _cached(key, (api, opt), lambda: _build_fused_step(
         api, opt, ltp, plan, w, protocol))
 
@@ -125,7 +127,7 @@ def build_worker_grad_fn(api, plan):
     """One worker's gradient against ITS OWN params snapshot (the
     async/SSP compute leg): (params, batch_slice) -> (loss, flat packets
     of shape (n_packets, packet_floats))."""
-    key = ("grad", id(api), _plan_key(plan))
+    key = ("grad", id(api), _plan_key(plan))  # replint: ok(determinism)
 
     def build():
         @jax.jit
@@ -171,7 +173,7 @@ def build_apply_fn(api, opt: Optimizer, ltp: LTPConfig, plan, w: int,
     Note: under "count" compensation the per-packet deliverer count is
     taken within the admitted batch.
     """
-    key = ("apply", id(api), id(opt), ltp, _plan_key(plan), w, premasked)
+    key = ("apply", id(api), id(opt), ltp, _plan_key(plan), w, premasked)  # replint: ok(determinism)
 
     def build():
         @jax.jit

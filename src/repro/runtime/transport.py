@@ -37,6 +37,7 @@ import numpy as np
 from repro.config import LTPConfig, NetConfig
 from repro.core.early_close import AnalyticIncastModel
 from repro.net import senders as snd
+from repro.net.genfence import GEN_KEY
 from repro.net.ltp_receiver import PSGatherReceiver, ShardedGatherReceiver
 from repro.net.scenarios import (
     GatherSpec,
@@ -106,7 +107,10 @@ class AnalyticPerWorkerNet:
             self.active -= 1
             cb(frac, early)
 
-        self.sim.after(t_close, done)
+        # ``cb`` is the runtime's on_delivered/on_close, which pops its
+        # flight-registry entry itself; the analytic net has no pooled
+        # flow lives of its own to fence.
+        self.sim.after(t_close, done)  # replint: ok(gen-fence)
 
 
 def _send_stop_pkt(tr: "DESTransport", back: Pipe, s) -> None:
@@ -115,7 +119,7 @@ def _send_stop_pkt(tr: "DESTransport", back: Pipe, s) -> None:
     matching ``_DESFlowSet``'s ack path; per-packet otherwise. The stop
     carries the sender's current flow generation so a stop for a
     finished iteration cannot kill the pooled sender's next life."""
-    stop = Packet(s.flow, -2, 41, kind="stop", meta={"g": s.gen})
+    stop = Packet(s.flow, -2, 41, kind="stop", meta={GEN_KEY: s.gen})
     if tr.coalesce > 1:
         back.send_train([stop], s.on_ack_train)
     else:

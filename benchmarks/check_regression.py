@@ -42,7 +42,8 @@ import sys
 from typing import Dict, List, Tuple
 
 DEFAULT_FILES = ("BENCH_netsim.json", "BENCH_kernels.json",
-                 "BENCH_runtime.json", "BENCH_faults.json")
+                 "BENCH_runtime.json", "BENCH_faults.json",
+                 "BENCH_netfaults.json")
 
 #: metric-name suffix -> direction ("up" = bigger is better)
 RULES: Tuple[Tuple[str, str], ...] = (
@@ -95,6 +96,15 @@ CEILINGS: Dict[str, float] = {
     # buffered O(1) append per event, so the honest cost is a couple
     # percent — 1.05 is the spec budget (ISSUE 8) incl. runner jitter.
     "telemetry_overhead_ratio": 1.05,
+    # network-layer chaos acceptance (DESIGN.md §14): the des16 fabric
+    # scenario (flap storm + switch crash + partition + rack brownout)
+    # with the budget controller on must cost < 10% of final loss vs
+    # the fault-free twin, and commits must be back at pre-fault
+    # cadence within 2 sim-seconds of the first injected fault. Both
+    # are seeded, machine-independent sim metrics — spec values, not
+    # drifting baselines.
+    "netfault_final_loss_ratio": 1.10,
+    "netfault_recovery_s": 2.0,
 }
 
 

@@ -1,0 +1,195 @@
+"""Network-fault sweep: training cost of fabric chaos and what the
+closed-loop loss-budget controller buys back (DESIGN.md §14).
+
+The headline scenario is a 16-worker packet-level DES run under link
+flaps + one aggregation-switch crash + one rack partition, measured
+three ways on the SAME drawn schedule and seeds: fault-free twin,
+faulted with the budget controller, faulted without it. Metrics:
+
+* ``netfault_recovery_s``   — time from the first injected fault until
+                              commits resume at pre-fault cadence
+                              (controller on; absolute ceiling in
+                              ``check_regression``);
+* ``netfault_goodput_ratio``— faulted steps/sim-second over the clean
+                              twin's (controller on; 1.0 = chaos cost
+                              nothing);
+* ``netfault_final_loss_ratio`` — faulted final loss / clean final loss
+                              (controller on; ceiling-gated at 1.10 —
+                              fabric chaos that silently costs more
+                              than 10% of final loss is a regression);
+* the same three with the ``_off`` suffix for the controller-off twin,
+  so the controller's contribution stays measured, not asserted.
+
+Every cell is seeded end to end; records are machine-independent and
+bitwise reproducible.
+
+  PYTHONPATH=src python -m benchmarks.netfault_sweep --quick
+  PYTHONPATH=src python -m benchmarks.run --only netfault_sweep
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.config import LTPConfig, NetConfig, RuntimeConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net.topology import rack_spine
+from repro.optim import make_optimizer
+from repro.runtime import (
+    BudgetController,
+    ClusterRuntime,
+    LinkFaultEvent,
+    LinkFaultSchedule,
+)
+
+from benchmarks.common import emit
+from benchmarks.sweep_scenarios import write_bench
+
+NET = NetConfig(10, 1, 0.001, 4096)
+W = 16
+RACKS = 4
+
+#: the des16 fabric-chaos scenario: a flap storm on one uplink (the
+#: plane reroutes it over the spare spine path), an aggregation-switch
+#: crash, one rack partition (survived via blackhole detection), then a
+#: mild brownout of one rack uplink — the controller's showcase: the
+#: rack's flows straggle in lockstep behind in-network aggregation,
+#: holding the aggregate delivered pct near the configured 0.8
+#: threshold, so controller-off rounds intermittently wait out the pct
+#: rule into the deadline window while the controller widens below the
+#: straggler plateau and keeps rounds closing at healthy-flow latency
+#: (DESIGN.md §14).
+DES16_NETFAULTS = LinkFaultSchedule([
+    LinkFaultEvent(0.04, "link_flap", "rack2/up", period_s=0.02,
+                   duty=0.5, duration_s=0.08),
+    LinkFaultEvent(0.09, "switch_crash", "rack1", recover_s=0.05),
+    LinkFaultEvent(0.13, "partition", "rack3", recover_s=0.08),
+    # the brownout starts only after the partitioned rack's senders have
+    # worked back out of RTO backoff (~0.36 s), so the two recovery
+    # phases stay separable in the apply cadence
+    # 10 Gbps uplink -> 50 Mbps: deep enough that the rack's lockstep
+    # delivered fraction crawls (holding the aggregate pct under 0.8
+    # into the deadline window on unlucky rounds), shallow enough that
+    # its critical packets — sent first via CQ — still land promptly,
+    # so the pct rule (not critical completeness) is what gates closes
+    LinkFaultEvent(0.45, "link_degrade", "rack2/up", rate_factor=5e-3,
+                   recover_s=0.30),
+])
+
+
+def _recovery_s(rt) -> float:
+    """Sim-seconds from the first injected fault until commits are
+    *done* stalling: the end of the last inter-apply gap that exceeded
+    1.5x the pre-fault median cadence. Scanning for the last slow gap
+    (not the first recovered one) is deliberate — a run that limps
+    through a brownout at half cadence has not recovered just because
+    one early gap happened to look normal."""
+    applies = [e["t"] for e in rt.tel.of("apply")]
+    nf = rt.tel.of("netfault")
+    if not nf or len(applies) < 3:
+        return 0.0
+    t0 = nf[0]["t"]
+    pre = [t for t in applies if t <= t0]
+    post = [t for t in applies if t > t0]
+    if len(pre) >= 3:
+        cadence = float(np.median(np.diff(pre)))
+    else:
+        cadence = float(np.median(np.diff(applies)))
+    recovered = t0
+    prev = pre[-1] if pre else t0
+    for t in post:
+        if t - prev > 1.5 * cadence:
+            recovered = t
+        prev = t
+    return round(max(recovered - t0, 0.0), 4)
+
+
+def _cell(api, tc, steps, *, net_faults=None, budget=False, seed=11):
+    rt = ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(), NET,
+        n_workers=W, protocol="ltp", policy="bsp", compute_time=0.01,
+        seed=seed, transport="des",
+        topology=rack_spine(RACKS, W // RACKS, n_ps=2),
+        net_faults=net_faults,
+        budget=BudgetController(interval_s=0.02) if budget else None,
+        runtime_cfg=RuntimeConfig(staleness_comp=0.5))
+    t0 = time.time()
+    rt.run(batches(SyntheticCIFAR(seed=3), tc.batch, steps))
+    wall = time.time() - t0
+    s = rt.tel.summary()
+    return rt, {
+        "scenario": "netfault_des16", "policy": "bsp", "transport": "des",
+        "budget": bool(budget),
+        "n_netfaults": s.get("n_netfaults", 0),
+        "n_flow_dead": s.get("n_flow_dead", 0),
+        "n_reroutes": s.get("n_reroutes", 0),
+        "n_blackholes": s.get("n_blackholes", 0),
+        "n_budget_moves": s.get("n_budget_moves", 0),
+        "recovery_s": _recovery_s(rt),
+        "simtime_s": round(rt.sim_time, 4),
+        "goodput_steps_per_s": round(len(rt.history) / rt.sim_time, 3),
+        "final_loss": round(float(rt.history[-1]["loss"]), 6),
+        "n_steps_done": len(rt.history),
+        "wall_s": round(wall, 2),
+    }
+
+
+def run(quick: bool = True):
+    steps = 40 if quick else 56
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    api = build(cfg)
+    tc = TrainConfig(batch=4 * W, lr=0.05, steps=steps)
+    rows = []
+    metrics = {}
+    t_start = time.time()
+
+    _, clean = _cell(api, tc, steps)
+    clean["scenario"] = "netfault_des16_free"
+    rows.append(clean)
+
+    rt_on, on = _cell(api, tc, steps, net_faults=DES16_NETFAULTS,
+                      budget=True)
+    rows.append(on)
+    _, off = _cell(api, tc, steps, net_faults=DES16_NETFAULTS,
+                   budget=False)
+    off["scenario"] = "netfault_des16_nobudget"
+    rows.append(off)
+
+    for row, suffix in ((on, ""), (off, "_off")):
+        assert row["n_steps_done"] == steps, \
+            f"faulted des16 run ({suffix or 'budget'}) did not complete"
+        metrics[f"netfault_recovery_s{suffix}"] = row["recovery_s"]
+        metrics[f"netfault_goodput_ratio{suffix}"] = round(
+            row["goodput_steps_per_s"] / clean["goodput_steps_per_s"], 4)
+        metrics[f"netfault_final_loss_ratio{suffix}"] = round(
+            row["final_loss"] / clean["final_loss"], 4)
+    metrics["netfault_n_reroutes"] = on["n_reroutes"]
+    metrics["netfault_n_budget_moves"] = on["n_budget_moves"]
+    metrics["netfault_sweep_wall_s"] = round(time.time() - t_start, 3)
+    write_bench(metrics, quick, "BENCH_netfaults.json")
+    emit(rows, "netfault_sweep")
+    print(f"des16 fabric chaos: final-loss ratio "
+          f"{metrics['netfault_final_loss_ratio']:.4f} (ceiling 1.10), "
+          f"recovery {metrics['netfault_recovery_s']:.3f}s, "
+          f"goodput x{metrics['netfault_goodput_ratio']:.3f} "
+          f"[controller off: ratio "
+          f"{metrics['netfault_final_loss_ratio_off']:.4f}, recovery "
+          f"{metrics['netfault_recovery_s_off']:.3f}s]")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid (default: full)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

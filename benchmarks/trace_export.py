@@ -24,10 +24,13 @@ from repro.data import SyntheticCIFAR, batches
 from repro.models import build
 from repro.obs.trace import validate_chrome_trace
 from repro.optim import make_optimizer
+from repro.net.topology import rack_spine
 from repro.runtime import (
     ClusterRuntime,
     FaultEvent,
     FaultSchedule,
+    LinkFaultEvent,
+    LinkFaultSchedule,
     LognormalStragglerCompute,
 )
 
@@ -42,6 +45,19 @@ def _fault_schedule(w: int) -> FaultSchedule:
     ])
 
 
+def _netfault_schedule() -> LinkFaultSchedule:
+    """Fabric chaos for the control track's fabric thread (DESIGN.md
+    §14): a link_flap square wave plus one trunk degrade, so the
+    exported trace shows the flap timeline and reroute markers."""
+    return LinkFaultSchedule([
+        LinkFaultEvent(0.05, "link_flap", target="rack1/up",
+                       period_s=0.03, duty=0.5, duration_s=0.15),
+        LinkFaultEvent(0.40, "link_degrade", target="ps0/trunk",
+                       rate_factor=0.5, extra_loss=0.02,
+                       duration_s=0.1),
+    ])
+
+
 def export(out: str, *, policy: str = "bsp", workers: int = 4,
            steps: int = 6, faults: bool = False, seed: int = 11,
            tracker: str = "none") -> dict:
@@ -53,6 +69,11 @@ def export(out: str, *, policy: str = "bsp", workers: int = 4,
     if faults:
         kw["faults"] = _fault_schedule(workers)
         kw["checkpoint_every_s"] = 0.1
+        if workers % 2 == 0:
+            # rack/spine so the link_flap has an uplink to flap and a
+            # spine backup to reroute through (DESIGN.md §14)
+            kw["topology"] = rack_spine(2, workers // 2, n_ps=1)
+            kw["net_faults"] = _netfault_schedule()
     rt = ClusterRuntime(
         api, make_optimizer(tc), tc, LTPConfig(staleness_comp=0.5), net,
         n_workers=workers, policy=policy, transport="des",
@@ -90,7 +111,9 @@ def main(argv=None) -> int:
             loaded = json.load(f)      # the artifact itself must parse
         problems = validate_chrome_trace(
             loaded, n_workers=args.workers, n_ps=rt.n_ps,
-            require_fault_markers=args.faults)
+            require_fault_markers=args.faults,
+            require_netfault_markers=(args.faults
+                                      and args.workers % 2 == 0))
         if problems:
             for p in problems:
                 print(f"INVALID: {p}")

@@ -272,6 +272,35 @@ class FaultConfig:
 
 
 @dataclass(frozen=True)
+class NetFaultConfig:
+    """Network-layer fault-injection knobs (DESIGN.md §14).
+
+    Converted into a concrete ``net.netfaults.LinkFaultSchedule`` once
+    the run horizon and topology are known
+    (``netfault_schedule_from_config``); the all-zero default draws an
+    empty schedule, which the runtime treats exactly like no fabric
+    fault plane at all (zero-fault parity).
+    """
+
+    link_down_rate: float = 0.0      # uplink admin-downs, per link-second
+    link_recover_s: float = 0.05     # downtime before the link comes back
+    flap_rate: float = 0.0           # uplink flap episodes, per link-second
+    flap_period_s: float = 0.02      # flap square-wave period
+    flap_duty: float = 0.5           # fraction of each period spent down
+    flap_duration_s: float = 0.2     # length of one flap episode
+    degrade_rate: float = 0.0        # degrade episodes, per link-second
+    degrade_rate_factor: float = 0.25  # line-rate multiplier while degraded
+    degrade_extra_loss: float = 0.05   # added loss probability
+    degrade_duration_s: float = 0.2
+    switch_crash_at: Tuple[float, ...] = ()  # sim times of ToR crashes
+    switch_recover_s: float = 0.05
+    partition_at: Tuple[float, ...] = ()     # sim times of rack partitions
+    partition_heal_s: float = 0.1
+    max_cut: int = 1                 # concurrent-severed-racks ceiling
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     mesh: MeshConfig = field(default_factory=MeshConfig)
@@ -279,3 +308,4 @@ class RunConfig:
     net: NetConfig = field(default_factory=NetConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     faults: Optional[FaultConfig] = None
+    net_faults: Optional[NetFaultConfig] = None

@@ -134,6 +134,29 @@ class AggSwitch:
         self.n_envelopes = 0   # merged envelopes emitted upstream
         self.n_timeout_flushes = 0
         self.n_membership_flushes = 0  # entries flushed by a member going dead
+        # fault plane (DESIGN.md §14): a crashed switch drops everything
+        # it holds and blackholes intake until recovery
+        self.crashed = False
+        self.n_dropped_crash = 0
+
+    # -- fault plane (DESIGN.md §14) ----------------------------------------
+    def crash(self) -> None:
+        """The programmable switch dies: pending partial reductions are
+        lost (their members' seqs stay un-ACKed, so the senders
+        retransmit after recovery), the hold timer stops, and intake
+        blackholes until ``recover``."""
+        if self.crashed:
+            return
+        self.crashed = True
+        for _s, e in sorted(self._open.items()):
+            self.n_dropped_crash += len(e[1])
+        self._open.clear()
+        if self._timer is not None:
+            self.sim.cancel(self._timer)
+            self._timer = None
+
+    def recover(self) -> None:
+        self.crashed = False
 
     # -- membership (fault hooks, DESIGN.md §10) ----------------------------
     def set_live(self, flow: int, alive: bool) -> None:
@@ -152,6 +175,9 @@ class AggSwitch:
     # -- datapath -----------------------------------------------------------
     def intake(self, items: TrainItems, ing: AggIngress) -> None:
         """Packets arriving from one rack member (one event)."""
+        if self.crashed:
+            self.n_dropped_crash += len(items)
+            return
         out: List[Packet] = []
         flush_upto = -1
         for pkt, _t in items:
@@ -258,5 +284,6 @@ class AggSwitch:
             "n_envelopes": self.n_envelopes,
             "n_timeout_flushes": self.n_timeout_flushes,
             "n_membership_flushes": self.n_membership_flushes,
+            "n_dropped_crash": self.n_dropped_crash,
             "pending": len(self._open),
         }

@@ -618,9 +618,21 @@ class BBRSender(_TcpBase):
 
 @register_sender("ltp")
 class LTPSender:
-    """Out-of-order sender with CQ/NQ/RQ queues and BDP-based CC."""
+    """Out-of-order sender with CQ/NQ/RQ queues and BDP-based CC.
+
+    Self-healing (DESIGN.md §14): when ``heal`` is armed by the
+    transport (only while a network fault plane is active — the default
+    keeps healthy-run timing bitwise identical), consecutive watchdog
+    RTOs with zero ACK progress escalate the retransmission timer
+    exponentially up to ``RTO_BACKOFF_CAP``x, and ``BLACKHOLE_RTOS``
+    consecutive RTOs abort the flow as dead-path: ``on_flow_dead(flow)``
+    signals up to the transport instead of retransmitting forever into
+    a blackhole. Registration retries ride the same backoff.
+    """
 
     OOO_THRESH = 3
+    RTO_BACKOFF_CAP = 16.0   # max multiplier on the watchdog delay
+    BLACKHOLE_RTOS = 6       # consecutive silent RTOs -> path is dead
 
     def __init__(self, sim: Sim, pipe: Pipe, deliver: Callable, n_packets: int,
                  critical: Optional[np.ndarray] = None, flow: int = 0,
@@ -660,6 +672,12 @@ class LTPSender:
         self.n_retx = 0         # replint: ok(pool-reset)
         self.n_ack_trains = 0   # replint: ok(pool-reset)
         self.n_gen_fenced = 0   # replint: ok(pool-reset)
+        # self-healing (DESIGN.md §14): transport wiring + cumulative
+        # counter survive pooled resets; the per-life backoff state is
+        # re-initialized by reset()
+        self.heal = False       # replint: ok(pool-reset)
+        self.on_flow_dead: Optional[Callable[[int], None]] = None  # replint: ok(pool-reset)
+        self.n_flow_dead = 0    # replint: ok(pool-reset)
         self.reset()
 
     def reset(self, gen: Optional[int] = None) -> None:
@@ -693,6 +711,8 @@ class LTPSender:
         self._phase = 0
         self._phase_start = 0.0
         self._last_check = -1.0
+        self.rto_backoff = 1.0
+        self.n_consec_rto = 0
         if self.watchdog is not None:
             self.sim.cancel(self.watchdog)
         self.watchdog = None
@@ -733,9 +753,13 @@ class LTPSender:
                            GEN_KEY: self.gen,
                            "critical": self.critical})
         self.pipe.send(reg, self.deliver)
-        self.sim.after(max(3 * self.est.rtprop, 5e-3)
-                       if math.isfinite(self.est.rtprop) else 20e-3,
-                       partial(self._send_reg, self.gen))
+        delay = (max(3 * self.est.rtprop, 5e-3)
+                 if math.isfinite(self.est.rtprop) else 20e-3)
+        if self.heal:
+            # reg retries ride the RTO backoff (DESIGN.md §14): a dead
+            # path must not be hammered at the base retry rate forever
+            delay *= self.rto_backoff
+        self.sim.after(delay, partial(self._send_reg, self.gen))
 
     def _arm_watchdog(self):
         if self.watchdog is not None:
@@ -743,18 +767,48 @@ class LTPSender:
         # per-packet retransmission timer: a few RTTs (ack losses must not
         # stall the flow — there is no cumulative-ACK recovery in LTP)
         delay = max(3 * self.est.rtprop, 3e-3) if math.isfinite(self.est.rtprop) else 0.2
+        if self.heal:
+            delay *= self.rto_backoff
         self.watchdog = self.sim.after(delay, self._on_watchdog)
 
     def _on_watchdog(self):
-        """Stall recovery: treat all outstanding as lost (per-packet RTO)."""
+        """Stall recovery: treat all outstanding as lost (per-packet RTO).
+
+        With healing armed, consecutive silent RTOs escalate the backoff
+        and eventually declare the path dead (DESIGN.md §14)."""
         if self.done or self.stopped:
             return
+        if self.heal:
+            self.n_consec_rto += 1
+            if self.n_consec_rto >= self.BLACKHOLE_RTOS:
+                self._abort_blackhole()
+                return
+            self.rto_backoff = min(self.rto_backoff * 2.0,
+                                   self.RTO_BACKOFF_CAP)
         while self.outstanding:
             _, seq = self.outstanding.popleft()
             if seq not in self.acked:
                 self._requeue_lost(seq)
         self._arm_watchdog()
         self._pump()
+
+    def _abort_blackhole(self):
+        """``BLACKHOLE_RTOS`` consecutive RTOs with zero ACK progress:
+        the path is dead (DESIGN.md §14). The flow aborts — permanently
+        silent, no completion callback — and ``on_flow_dead`` signals up
+        to the transport, which tears the worker's flows exactly like
+        the node-death ``flow_torn`` path."""
+        self.n_flow_dead += 1
+        self.stopped = True
+        self.done = True
+        if self.watchdog is not None:
+            self.sim.cancel(self.watchdog)
+        self.watchdog = None
+        if self.pacing_timer is not None:
+            self.sim.cancel(self.pacing_timer)
+        self.pacing_timer = None
+        if self.on_flow_dead is not None:
+            self.on_flow_dead(self.flow)
 
     def _requeue_lost(self, seq: int):
         self.n_retx += 1
@@ -874,6 +928,8 @@ class LTPSender:
                 self.n_gen_fenced += 1
                 return
             self.reg_acked = True
+            self.n_consec_rto = 0   # the path answered: not a blackhole
+            self.rto_backoff = 1.0
             if len(self.acked) >= self.n:
                 self._finish()  # data completed while the reg was in flight
             return
@@ -887,6 +943,8 @@ class LTPSender:
         self.acked.add(seq)
         order = pkt.meta.get("order", self.send_order.get(seq, -1))
         self.highest_acked_order = max(self.highest_acked_order, order)
+        self.n_consec_rto = 0   # ACK progress: the path is alive
+        self.rto_backoff = 1.0
         self._arm_watchdog()
         self._scan_outstanding()
         # the flow is only complete once the registration is acked too:
@@ -968,6 +1026,8 @@ class LTPSender:
         if rtts:
             self.est.on_ack(self.payload * len(rtts), min(rtts))
         self._startup_check()
+        self.n_consec_rto = 0   # ACK progress: the path is alive
+        self.rto_backoff = 1.0
         self._arm_watchdog()
         self._scan_outstanding()
         if self.reg_acked and len(self.acked) >= self.n:
@@ -980,4 +1040,5 @@ class LTPSender:
         (DESIGN.md §12)."""
         return {"n_retx": self.n_retx,
                 "n_ack_trains": self.n_ack_trains,
-                "n_gen_fenced": self.n_gen_fenced}
+                "n_gen_fenced": self.n_gen_fenced,
+                "n_flow_dead": self.n_flow_dead}

@@ -398,6 +398,63 @@ class Pipe:
         self.n_dropped_queue = 0
         self.n_dropped_loss = 0
         self.bytes_delivered = 0
+        # network fault plane (DESIGN.md §14). ``faultable`` stays False
+        # until a LinkFaultSchedule arms this pipe — the default send
+        # paths then never branch on any of this state, so an unarmed
+        # run is bitwise-identical to a build without the fault plane.
+        self.faultable = False
+        self.up = True
+        self.link_gen = 0        # bumps on every link_down: in-flight fence
+        self.backup: Optional["Pipe"] = None   # spine-redundant reroute
+        self.n_dropped_down = 0  # packets blackholed by a dead link
+        self.n_rerouted = 0      # packets diverted onto the backup pipe
+        self._base_rate = rate_bps
+        self._base_loss = loss
+
+    # -- fault plane (DESIGN.md §14) ----------------------------------------
+    def set_up(self, up: bool) -> None:
+        """Admin link state. Downing the link bumps ``link_gen`` so every
+        delivery already scheduled on the wire is fenced out at arrival —
+        no silent delivery from a dead link (the §9 generation pattern
+        applied to the physical layer). The serializer backlog burns with
+        the link."""
+        self.faultable = True
+        if self.up == up:
+            return
+        self.up = up
+        if not up:
+            self.link_gen += 1
+            self.busy_until = 0.0
+
+    def set_degraded(self, rate_factor: float = 1.0,
+                     extra_loss: float = 0.0) -> None:
+        """Degrade the link in place: cut the line rate by
+        ``rate_factor`` and/or surge the random-loss probability."""
+        self.faultable = True
+        self.rate = self._base_rate * max(rate_factor, 1e-9)
+        self.loss = min(1.0, self._base_loss + max(extra_loss, 0.0))
+
+    def clear_degraded(self) -> None:
+        self.rate = self._base_rate
+        self.loss = self._base_loss
+
+    def _deliver_fenced(self, deliver: Callable[[Packet], None],
+                        pkt: Packet, gen: int) -> None:
+        """Delivery on a faultable pipe: drop if the link went down after
+        this packet entered the wire (``link_gen`` moved)."""
+        if gen == self.link_gen:
+            deliver(pkt)
+        else:
+            self.n_dropped_down += 1
+            self.bytes_delivered -= pkt.size
+
+    def _deliver_train_fenced(self, deliver_train: Callable[["TrainItems"], None],
+                              items: "TrainItems", gen: int) -> None:
+        if gen == self.link_gen:
+            deliver_train(items)
+        else:
+            self.n_dropped_down += len(items)
+            self.bytes_delivered -= sum(p.size for p, _ in items)
 
     def queue_len(self) -> float:
         backlog = max(0.0, self.busy_until - self.sim.now)
@@ -411,6 +468,13 @@ class Pipe:
     # replint: hotpath
     def send(self, pkt: Packet, deliver: Callable[[Packet], None]) -> bool:
         """Returns False if droptail-dropped at enqueue."""
+        if self.faultable and not self.up:
+            bk = self.backup
+            if bk is not None and bk.up:
+                self.n_rerouted += 1
+                return bk.send(pkt, deliver)
+            self.n_dropped_down += 1
+            return True   # blackholed in flight (the sender can't tell)
         if self.queue_len() >= self.cap:
             self.n_dropped_queue += 1
             return False
@@ -424,6 +488,13 @@ class Pipe:
         arrive = self.busy_until + self.delay
         self.bytes_delivered += pkt.size
         PERF.packets += 1
+        if self.faultable:
+            # armed pipe: deliveries fence on link_gen so a cut kills
+            # everything still on the wire (DESIGN.md §14)
+            self.sim.at(arrive,
+                        partial(self._deliver_fenced, deliver, pkt,
+                                self.link_gen))
+            return True
         # partial() beats a def-closure here: this is the per-packet hot
         # path and partial allocates no code/cell objects
         self.sim.at(arrive, partial(deliver, pkt))
@@ -454,6 +525,13 @@ class Pipe:
         packets admitted past the droptail queue.
         """
         if not pkts:
+            return 0
+        if self.faultable and not self.up:
+            bk = self.backup
+            if bk is not None and bk.up:
+                self.n_rerouted += len(pkts)
+                return bk.send_train(pkts, deliver_train, t_ready)
+            self.n_dropped_down += len(pkts)
             return 0
         now = self.sim.now
         if t_ready is None:
@@ -509,7 +587,12 @@ class Pipe:
                 return n_acc
         self.bytes_delivered += sum(p.size for p, _ in items)
         PERF.packets += len(items)
-        self.sim.at(items[-1][1], partial(deliver_train, items))
+        if self.faultable:
+            self.sim.at(items[-1][1],
+                        partial(self._deliver_train_fenced, deliver_train,
+                                items, self.link_gen))
+        else:
+            self.sim.at(items[-1][1], partial(deliver_train, items))
         return n_acc
 
 
@@ -566,6 +649,17 @@ class Route:
     @property
     def n_dropped_loss(self) -> int:
         return sum(p.n_dropped_loss for p in self.pipes)
+
+    @property
+    def n_dropped_down(self) -> int:
+        return sum(p.n_dropped_down for p in self.pipes)
+
+    @property
+    def up(self) -> bool:
+        """True when every hop is admin-up OR can reroute around its cut
+        (fault plane, DESIGN.md §14) — the path can still carry traffic."""
+        return all(p.up or (p.backup is not None and p.backup.up)
+                   for p in self.pipes)
 
 
 class Topology:

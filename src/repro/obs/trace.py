@@ -20,7 +20,11 @@ or chrome://tracing. The track layout:
                      PS pending depth, max trunk depth, and (when the
                      sampler recorded per-trunk depths) one counter per
                      trunk.
-  pid 5 "control"    injected fault markers (one instant per FaultEvent).
+  pid 5 "control"    injected fault markers (one instant per FaultEvent);
+                     thread 1 carries fabric-fault markers (one instant
+                     per LinkFaultEvent plus reroute/blackhole path
+                     transitions, DESIGN.md §14) and thread 2 the
+                     budget-controller pct_threshold counter.
 
 Spans are ``X`` (complete) events in microseconds of sim time; tracks
 exist for every worker/PS slot via thread_name metadata even when empty,
@@ -108,6 +112,8 @@ def chrome_trace(events: Iterable[dict], *, n_workers: Optional[int] = None,
     out += _meta(PID_PS, "ps")
     out += _meta(PID_NET, "net", 0, "queues")
     out += _meta(PID_CONTROL, "control", 0, "faults")
+    out += _meta(PID_CONTROL, "control", 1, "fabric")[1:]
+    out += _meta(PID_CONTROL, "control", 2, "budget")[1:]
     for w in sorted(workers):
         out += _meta(PID_WORKERS, "workers", w, f"worker {w}")[1:]
         out += _meta(PID_TRANSPORT, "transport", w, f"worker {w} flows")[1:]
@@ -196,6 +202,22 @@ def chrome_trace(events: Iterable[dict], *, n_workers: Optional[int] = None,
         elif kind == "fault":
             out.append(_instant(f"fault:{e.get('fault')}", PID_CONTROL, 0,
                                 t, {"target": e.get("target")}, scope="g"))
+        elif kind == "netfault":
+            # fabric faults (DESIGN.md §14) get their own control
+            # thread so a link_flap timeline reads as a dotted row
+            # distinct from node crash/failover markers
+            out.append(_instant(f"netfault:{e.get('fault')}", PID_CONTROL,
+                                1, t, {"target": e.get("target")},
+                                scope="g"))
+        elif kind in ("reroute", "blackhole"):
+            out.append(_instant(f"path:{kind}", PID_CONTROL, 1, t,
+                                {"link": e.get("link")}))
+        elif kind == "flow_dead":
+            close_flight(int(e["worker"]), int(e["iteration"]), t, "dead")
+        elif kind == "budget":
+            out.append({"name": f"pct_threshold shard{e.get('shard')}",
+                        "ph": "C", "pid": PID_CONTROL, "tid": 2,
+                        "ts": t * _US, "args": {"pct": e.get("pct")}})
         elif kind == "lifecycle":
             w = int(e["worker"])
             if e.get("state") == "dead":
@@ -267,7 +289,9 @@ def _well_nested(spans: Sequence[dict], eps: float = 1e-3) -> Optional[str]:
 def validate_chrome_trace(doc: Dict[str, Any],
                           n_workers: Optional[int] = None,
                           n_ps: Optional[int] = None,
-                          require_fault_markers: bool = False) -> List[str]:
+                          require_fault_markers: bool = False,
+                          require_netfault_markers: bool = False
+                          ) -> List[str]:
     """Schema smoke over an exported trace; returns problem strings
     (empty = valid). Checks: JSON-shape, thread tracks for every
     worker/PS slot, at least one compute and one transport span, spans
@@ -310,4 +334,9 @@ def validate_chrome_trace(doc: Dict[str, Any],
                    and str(e.get("name", "")).startswith("fault:")
                    for e in evs):
             problems.append("no fault markers in a faulted run")
+    if require_netfault_markers:
+        if not any(e.get("ph") == "i"
+                   and str(e.get("name", "")).startswith("netfault:")
+                   for e in evs):
+            problems.append("no netfault markers in a fabric-faulted run")
     return problems

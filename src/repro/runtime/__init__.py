@@ -8,6 +8,14 @@ from repro.runtime.compute import (  # noqa: F401
     TraceCompute,
     make_compute_model,
 )
+from repro.net.netfaults import (  # noqa: F401
+    LINK_FAULT_KINDS,
+    LinkFaultEvent,
+    LinkFaultSchedule,
+    NetFaultPlane,
+    netfault_schedule_from_config,
+)
+from repro.runtime.budget import BudgetController  # noqa: F401
 from repro.runtime.faults import (  # noqa: F401
     FAULT_KINDS,
     FaultEvent,

@@ -66,8 +66,17 @@ class FaultEvent:
 
     def label(self) -> str:
         """Human-readable marker text for trace exports (DESIGN.md §12),
-        e.g. ``"crash worker3 @12.50s"``."""
-        unit = "ps" if self.kind.startswith("ps_") else "worker"
+        e.g. ``"crash worker3 @12.50s"``. The unit derives from the kind
+        prefix — a kind that names neither a worker nor a PS (the
+        network fault plane's link/switch events render through the same
+        trace path) carries its target verbatim instead of being
+        mislabelled ``worker{target}``."""
+        if self.kind.startswith("ps_"):
+            unit = "ps"
+        elif self.kind.startswith("worker_"):
+            unit = "worker"
+        else:
+            unit = ""
         s = f"{self.kind} {unit}{self.target} @{self.t:.2f}s"
         if self.recover_s:
             s += f" (+{self.recover_s:.2f}s recovery)"

@@ -49,6 +49,7 @@ from repro.config import (
     FaultConfig,
     LTPConfig,
     NetConfig,
+    NetFaultConfig,
     ObservabilityConfig,
     RuntimeConfig,
     TrainConfig,
@@ -60,6 +61,11 @@ from repro.core.early_close import (
     broadcast_time,
 )
 from repro.models.api import ModelApi
+from repro.net.netfaults import (
+    LinkFaultSchedule,
+    NetFaultPlane,
+    netfault_schedule_from_config,
+)
 from repro.net.scenarios import GatherSpec
 from repro.net.simcore import PERF, Sim
 from repro.obs.metrics import MetricsRegistry
@@ -134,6 +140,8 @@ class ClusterRuntime:
         topology: Optional[GatherSpec] = None,
         runtime_cfg: Optional[RuntimeConfig] = None,
         obs: Optional[ObservabilityConfig] = None,
+        net_faults=None,
+        budget=None,
     ):
         if transport not in ("analytic", "des"):
             raise ValueError(f"unknown transport {transport!r}")
@@ -209,8 +217,8 @@ class ClusterRuntime:
             self.net_des = DESTransport(
                 self.sim, net, ltp, protocol, n_workers, self.model_bytes,
                 topology=self.topology, seed=seed, coalesce=coalesce,
-                on_early_close=lambda shard, t, d: self.tel.record(
-                    "early_close", t, shard=shard, delivered=d))
+                on_early_close=lambda shard, t, d, lat=0.0: self.tel.record(
+                    "early_close", t, shard=shard, delivered=d, lat=lat))
         else:
             self.anet = AnalyticPerWorkerNet(
                 self.sim, net, ltp, protocol, n_workers, self.model_bytes,
@@ -238,6 +246,39 @@ class ClusterRuntime:
             raise TypeError(
                 f"faults must be a FaultSchedule or FaultConfig, "
                 f"got {type(faults)!r}")
+        # network fault plane (net/netfaults.py, DESIGN.md §14): same
+        # dormant-unless-armed contract as the node-fault layer.
+        # ``net_faults`` is a LinkFaultSchedule (explicit timeline) or a
+        # NetFaultConfig (random fabric churn drawn in run()). Fabric
+        # faults act on the packet-level topology, so they require
+        # transport="des"; an empty schedule arms nothing and the run
+        # stays bitwise-identical to a fault-unaware one.
+        self._netfault_cfg: Optional[NetFaultConfig] = None
+        self.net_faults: Optional[LinkFaultSchedule] = None
+        self.netfault_plane: Optional[NetFaultPlane] = None
+        if isinstance(net_faults, LinkFaultSchedule):
+            self.net_faults = net_faults
+        elif isinstance(net_faults, NetFaultConfig):
+            self._netfault_cfg = net_faults
+        elif net_faults is not None:
+            raise TypeError(
+                f"net_faults must be a LinkFaultSchedule or "
+                f"NetFaultConfig, got {type(net_faults)!r}")
+        if (self.net_faults is not None or self._netfault_cfg is not None) \
+                and transport != "des":
+            raise ValueError(
+                "net_faults requires transport='des' — the analytic "
+                "transport has no links or switches to fail")
+        # closed-loop loss-budget controller (runtime/budget.py): bound
+        # and ticked in run() only when provided (None -> untouched
+        # thresholds, zero-fault parity)
+        self.budget = budget
+        if budget is not None and transport != "des":
+            raise ValueError(
+                "budget controller requires transport='des' — the "
+                "analytic transport has no per-shard Early-Close "
+                "receivers to actuate")
+        self._budget_cancel = None
         self._ckpt_every = float(checkpoint_every_s)
         self._ckpt_dir = checkpoint_dir
         self._snap: Optional[dict] = None
@@ -811,6 +852,62 @@ class ClusterRuntime:
         elif ev.kind == "ps_recover":
             self._fault_ps_recover(ev.target % self.n_ps)
 
+    # -- network fault plane (DESIGN.md §14) ---------------------------
+
+    def _on_netfault(self, ev) -> None:
+        """NetFaultPlane ``on_event`` tap: one record per realized
+        LinkFaultEvent (mirrors the node-fault ``fault`` records)."""
+        self.tel.record("netfault", self.sim.now, fault=ev.kind,
+                        target=str(ev.target))
+
+    def _on_path_state(self, kind: str, target: str) -> None:
+        """NetFaultPlane ``on_path`` tap: path-state transitions —
+        ``reroute`` (backup absorbed the cut) or ``blackhole`` (no
+        redundancy; traffic on the path is being dropped)."""
+        self.tel.record(kind, self.sim.now, link=str(target))
+
+    def on_flow_dead(self, idx: int) -> None:
+        """LTP blackhole detection fired for worker ``idx``: its sender
+        hit BLACKHOLE_RTOS consecutive timeouts and aborted the flow.
+        The worker itself is alive — only its transport leg is gone —
+        so this drops the in-flight contribution (bsp: shrink the
+        barrier; async/ssp: fence the flight entry) and tears the
+        worker's flow state so the next iteration starts clean."""
+        if self._stopped:
+            return
+        for key in [k for k in self._flight if k[0] == idx]:
+            del self._flight[key]
+            self.tel.record("flow_dead", self.sim.now, worker=idx,
+                            iteration=key[1])
+        if self.net_des is not None:
+            self.net_des.teardown_worker(idx)
+        if isinstance(self.policy, BSPPolicy):
+            self._bsp_round_flow_dead(idx)
+        self.wake_blocked()
+        self.maybe_finish()
+
+    def _bsp_round_flow_dead(self, worker: int) -> None:
+        """A blackholed flow removed ``worker``'s contribution from the
+        in-flight round. Same barrier surgery as a crash
+        (_bsp_round_member_lost) but the event is ``flow_dead`` — the
+        worker survives and rejoins the barrier next round."""
+        rnd = self._bsp_round
+        if rnd is None or worker not in rnd.members:
+            return
+        rnd.members.discard(worker)
+        if worker in rnd.ready:
+            rnd.ready.discard(worker)
+            self.tel.record("flow_dead", self.sim.now, worker=worker,
+                            iteration=rnd.iteration)
+        if rnd.gather is not None:
+            rnd.gather.abandon_worker(worker)
+            return
+        if not rnd.members:
+            self._bsp_round_dissolved()
+            return
+        if self.net_des is not None:
+            self._bsp_reliable_check(rnd)
+
     def _fault_worker_crash(self, idx: int) -> None:
         wk = self.workers[idx]
         if wk.state == "dead":
@@ -981,6 +1078,8 @@ class ClusterRuntime:
             self._sampler_cancel()
         if self._ckpt_cancel is not None:
             self._ckpt_cancel()
+        if self._budget_cancel is not None:
+            self._budget_cancel()
 
     _sampler_cancel = None
 
@@ -1007,6 +1106,28 @@ class ClusterRuntime:
                                                self._take_snapshot)
         if self.faults is not None:
             self.faults.arm(self.sim, self.on_fault)
+        if self._netfault_cfg is not None and self.net_faults is None:
+            base = float(getattr(self.compute, "base", 0.05))
+            t_end = max(self.steps * base * 3.0, 1.0)
+            self.net_faults = netfault_schedule_from_config(
+                self._netfault_cfg, self.topology, t_end)
+        if self.net_faults is not None and len(self.net_faults) > 0 \
+                and self.net_des is not None:
+            # fabric faults armed: build the plane over the live DES
+            # topology and turn on sender self-healing (RTO backoff +
+            # blackhole abort -> on_flow_dead). An EMPTY schedule skips
+            # all of this, so pipes stay unfaulted and senders keep the
+            # exact unhealed timing (zero-fault parity pin).
+            self.netfault_plane = NetFaultPlane(
+                self.sim, self.net_des.topo, self.topology,
+                seed=self.seed, on_event=self._on_netfault,
+                on_path=self._on_path_state)
+            self.net_faults.arm(self.sim, self.netfault_plane.dispatch)
+            self.net_des.enable_healing(self.on_flow_dead)
+        if self.budget is not None:
+            self.budget.bind(self)
+            self._budget_cancel = self.sim.every(self.budget.interval_s,
+                                                 self.budget.tick)
         if self.net_des is not None and self.tel.enabled:
             # trunk-queue sampler: an actor hook on the shared clock.
             # The O(n_ps) topology walk lives HERE, on the wall grid —
@@ -1066,6 +1187,8 @@ class ClusterRuntime:
             self._sampler_cancel()
         if self._ckpt_cancel is not None:
             self._ckpt_cancel()
+        if self._budget_cancel is not None:
+            self._budget_cancel()
         self._finalize_history()
         if self.tracker is not None:
             self._emit_observability()

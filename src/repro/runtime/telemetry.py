@@ -116,6 +116,19 @@ class Telemetry:
             n = self._count(kind)
             if n or n_faults:
                 out[key] = n
+        # fabric-fault scalars (DESIGN.md §14): same contract as the
+        # node-fault block — a netfault run carries the full key set
+        # (zeros included); a fault-free run's summary is unchanged.
+        n_netfaults = self._count("netfault")
+        if n_netfaults:
+            out["n_netfaults"] = n_netfaults
+        for key, kind in (("n_flow_dead", "flow_dead"),
+                          ("n_reroutes", "reroute"),
+                          ("n_blackholes", "blackhole"),
+                          ("n_budget_moves", "budget")):
+            n = self._count(kind)
+            if n or n_netfaults:
+                out[key] = n
         return out
 
     # -- observability-layer hooks (DESIGN.md §12) ---------------------

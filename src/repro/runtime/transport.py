@@ -169,7 +169,7 @@ class _DESFlowSet:
 
             recv = PSGatherReceiver(
                 tr.sim, [w], tr.lt_per_worker[w], tr.deadline_per_worker[w],
-                tr.ltp.data_pct_threshold, send_stop, on_close=on_close)
+                tr.pct_eff[p], send_stop, on_close=on_close)
             # orphan recovery: data from an older generation means that
             # life of the sender never got its stop (lost in flight) —
             # re-stop it, but only while it still lives that generation
@@ -179,6 +179,9 @@ class _DESFlowSet:
             s = snd.LTPSender(tr.sim, path,
                               recv.on_data, tr.n, critical=tr.crit, flow=w,
                               rng=tr.rng, train_len=tr.coalesce)
+            if tr.heal:
+                s.heal = True
+                s.on_flow_dead = tr._flow_dead
             recv.attach_ack(w, lambda pkt, s=s, back=back:
                             back.send(pkt, s.on_ack))
             if tr.coalesce > 1:
@@ -291,6 +294,10 @@ class _DESBarrierGather:
             tr.ltp.data_pct_threshold, send_stop)
         self._n_closed = 0
         for p, shard in enumerate(self.sharded.shards):
+            # per-shard effective Early-Close threshold (the budget
+            # controller's knob, DESIGN.md §14) — identical to the
+            # config value until a controller moves it
+            shard.pct_threshold = tr.pct_eff[p]
             shard.on_close = self._shard_closed
             # orphan recovery: a sender whose stop was lost and whose
             # shard closed before its next add_worker reset would pump
@@ -347,7 +354,8 @@ class _DESBarrierGather:
         if self.cb is None:
             return
         self.tr.on_early_close(shard.ps_id, self.tr.sim.now,
-                               float(shard.agg_pct), shard.all_full)
+                               float(shard.agg_pct), shard.all_full,
+                               lat=shard.bst_gather())
         self._n_closed += 1
         if self._n_closed >= self.tr.n_ps:
             self.cb(self.sharded)
@@ -371,6 +379,9 @@ class _DESBarrierGather:
                                       tr.protocol),
                     shard.on_data, tr.n, critical=tr.crit,
                     flow=worker, rng=tr.rng, train_len=tr.coalesce)
+                if tr.heal:
+                    s.heal = True
+                    s.on_flow_dead = tr._flow_dead
                 if tr.coalesce > 1:
                     s.deliver_train = shard.on_data_train
                 self._backs[key] = back
@@ -455,6 +466,15 @@ class DESTransport:
         self.lt_shard = float(self.lt_per_worker.max())
         self.deadline_shard = self.lt_shard + c
         self._on_early_close = on_early_close
+        # self-healing (DESIGN.md §14): armed by the runtime only while
+        # a network fault plane is active; the default keeps every
+        # pooled sender on the exact pre-fault-plane timing
+        self.heal = False
+        self._on_flow_dead: Optional[Callable[[int], None]] = None
+        # per-shard effective Early-Close pct threshold — the budget
+        # controller's actuation knob (DESIGN.md §14); equals the config
+        # value until a controller moves it
+        self.pct_eff: List[float] = [ltp.data_pct_threshold] * self.n_ps
         # flow pools (DESIGN.md §9): per-worker flow-set free lists
         # (async/SSP; a worker's next flow can start while the previous
         # one is still draining, so reuse requires ``idle``), one barrier
@@ -469,6 +489,47 @@ class DESTransport:
     def stop(self) -> None:
         for src in self.sources:
             src.stop()
+
+    # -- self-healing + budget control (DESIGN.md §14) ----------------------
+    def enable_healing(self, on_flow_dead: Callable[[int], None]) -> None:
+        """Arm RTO backoff + blackhole detection on every pooled LTP
+        sender (existing and future). ``on_flow_dead(worker)`` fires
+        when a sender declares its path dead after ``BLACKHOLE_RTOS``
+        silent RTOs — the runtime tears the worker's flows exactly like
+        the node-death ``flow_torn`` path."""
+        self.heal = True
+        self._on_flow_dead = on_flow_dead
+        for s in self._all_senders():
+            if isinstance(s, snd.LTPSender):
+                s.heal = True
+                s.on_flow_dead = self._flow_dead
+
+    def _flow_dead(self, worker: int) -> None:
+        if self._on_flow_dead is not None:
+            self._on_flow_dead(worker)
+
+    def set_pct_threshold(self, shard: int, pct: float) -> None:
+        """Move shard's effective Early-Close pct threshold (the budget
+        controller's actuation, DESIGN.md §14). Applies to the pooled
+        receivers in place — ``pct_threshold`` survives their pooled
+        resets — and to flow graphs built later."""
+        self.pct_eff[shard] = float(pct)
+        for pool in self._flowsets.values():
+            for fs in pool:
+                r = fs.recvs[shard]
+                if hasattr(r, "pct_threshold"):
+                    r.pct_threshold = float(pct)
+        if self._barrier is not None:
+            self._barrier.sharded.shard(shard).pct_threshold = float(pct)
+
+    def _all_senders(self) -> List:
+        out: List = []
+        for pool in self._flowsets.values():
+            for fs in pool:
+                out.extend(fs.senders)
+        if self._barrier is not None:
+            out.extend(self._barrier._senders.values())
+        return out
 
     def _mark_live(self, worker: int, alive: bool) -> None:
         """Keep the ToR aggregation points' live-membership in sync with
@@ -509,9 +570,12 @@ class DESTransport:
         self._barrier = None
 
     def on_early_close(self, shard: int, t: float, delivered: float,
-                       full: bool) -> None:
+                       full: bool, lat: float = 0.0) -> None:
+        """``lat`` is the gather's close latency (close - t0): the budget
+        controller's primary distress signal — a degraded fabric shows up
+        as late closes long before the delivered fraction moves."""
         if self._on_early_close is not None and not full:
-            self._on_early_close(shard, t, delivered)
+            self._on_early_close(shard, t, delivered, lat)
 
     # -- async/SSP: independent per-worker flow sets ------------------------
     def send(self, worker: int,
@@ -563,10 +627,12 @@ class DESTransport:
         if self._barrier is not None:
             senders.extend(self._barrier._senders.values())
             recvs.extend(self._barrier.sharded.shards)
+        out["n_flow_dead"] = 0
         for s in senders:
             out["n_retx"] += getattr(s, "n_retx", 0)
             out["n_ack_trains"] += getattr(s, "n_ack_trains", 0)
             out["n_gen_fenced"] += getattr(s, "n_gen_fenced", 0)
+            out["n_flow_dead"] += getattr(s, "n_flow_dead", 0)
         for r in recvs:
             out["n_stale_fenced"] += getattr(r, "n_stale_fenced", 0)
             out["n_stop_resends"] += getattr(r, "n_stop_resends", 0)

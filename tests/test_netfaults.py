@@ -1,0 +1,418 @@
+"""Network-layer chaos (DESIGN.md §14): link/switch fault injection,
+self-healing LTP flows, and the closed-loop loss-budget controller.
+
+Invariants this suite pins:
+
+  * zero-fault parity — an armed-but-empty fabric-fault layer (empty
+    LinkFaultSchedule, no controller) is bitwise identical to a
+    fault-unaware runtime: same history, same telemetry stream
+  * extended conservation — every grad_ready is applied, stale-dropped,
+    torn, lost, or blackholed (flow_dead); nothing vanishes silently
+  * blackhole liveness — a permanently partitioned rack's flows abort
+    via RTO backoff within bounded sim time; the barrier never wedges
+  * determinism — faulted runs replay bitwise from (seed, schedule),
+    and drawn schedules never cut more racks than the configured ceiling
+"""
+import numpy as np
+import pytest
+
+from repro.config import LTPConfig, NetConfig, NetFaultConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCIFAR, batches
+from repro.models import build
+from repro.net.simcore import Packet, Pipe, Sim
+from repro.net.topology import rack_spine
+from repro.optim import make_optimizer
+from repro.runtime import (
+    BudgetController,
+    ClusterRuntime,
+    FaultEvent,
+    LinkFaultEvent,
+    LinkFaultSchedule,
+    NetFaultPlane,
+    netfault_schedule_from_config,
+)
+from repro.net.netfaults import max_concurrent_cut
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NET = NetConfig(10, 1, 0.001, 4096)
+W = 4
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def api():
+    cfg = get_config("papernet").replace(d_model=8, n_layers=3)
+    return build(cfg)
+
+
+def _rt(api, policy="bsp", steps=STEPS, w=W, racks=2, n_ps=1, seed=0,
+        **kw):
+    tc = TrainConfig(batch=4 * w, lr=0.05, steps=steps)
+    return ClusterRuntime(
+        api, make_optimizer(tc), tc, LTPConfig(), NET, n_workers=w,
+        policy=policy, compute_time=0.05, seed=seed, transport="des",
+        topology=rack_spine(racks, w // racks, n_ps=n_ps), **kw)
+
+
+def _run(rt, steps=STEPS, w=W):
+    return rt.run(batches(SyntheticCIFAR(seed=0), 4 * w, steps))
+
+
+def _assert_conservation(rt):
+    """grad_ready == applied + stale + torn + lost + flow_dead — the §10
+    law extended with the fabric-fault sink (DESIGN.md §14)."""
+    tel = rt.tel
+    n_ready = len(tel.of("grad_ready"))
+    applied = sum(e["n_grads"] for e in tel.of("apply"))
+    n_stale = len(tel.of("stale_drop"))
+    n_torn = len(tel.of("flow_torn"))
+    n_lost = len(tel.of("ps_lost"))
+    n_dead = len(tel.of("flow_dead"))
+    assert n_ready == applied + n_stale + n_torn + n_lost + n_dead, (
+        n_ready, applied, n_stale, n_torn, n_lost, n_dead)
+
+
+# ---------------------------------------------------------------------------
+# event / schedule units
+# ---------------------------------------------------------------------------
+
+
+def test_link_fault_event_validation_and_label():
+    with pytest.raises(ValueError, match="unknown link fault kind"):
+        LinkFaultEvent(0.1, "meteor")
+    with pytest.raises(ValueError, match="must be >= 0"):
+        LinkFaultEvent(-1.0, "link_down", "rack0/up")
+    with pytest.raises(TypeError):
+        LinkFaultSchedule([("not", "an", "event")])
+    lbl = LinkFaultEvent(0.1, "link_flap", "rack1/up", period_s=0.02,
+                         duty=0.5, duration_s=0.2).label()
+    assert lbl.startswith("link_flap rack1/up @0.10s")
+    assert "duty 0.50" in lbl
+    lbl = LinkFaultEvent(0.5, "partition", "rack2", recover_s=0.1).label()
+    assert "+0.10s recovery" in lbl
+
+
+def test_node_fault_labels_name_the_right_unit():
+    # satellite regression: ps_* / worker_* kinds must not both render
+    # as "worker{target}"
+    assert FaultEvent(0.5, "ps_fail", 1).label().startswith(
+        "ps_fail ps1 @0.50s")
+    assert FaultEvent(0.5, "worker_crash", 2).label().startswith(
+        "worker_crash worker2 @0.50s")
+
+
+def test_schedule_sorted_stable_deterministic():
+    evs = [LinkFaultEvent(0.3, "link_down", "rack0/up"),
+           LinkFaultEvent(0.1, "link_up", "rack1/up"),
+           LinkFaultEvent(0.3, "heal", "rack0")]
+    s = LinkFaultSchedule(evs)
+    assert [e.t for e in s] == [0.1, 0.3, 0.3]
+    assert [e.kind for e in s] == ["link_up", "link_down", "heal"]
+    spec = rack_spine(4, 4, n_ps=2)
+    a = LinkFaultSchedule.random(spec, 2.0, seed=5, flap_rate=3.0,
+                                 partition_at=(0.5, 1.0))
+    b = LinkFaultSchedule.random(spec, 2.0, seed=5, flap_rate=3.0,
+                                 partition_at=(0.5, 1.0))
+    assert a.events == b.events and len(a) > 0
+
+
+def test_random_never_downs_trunks_or_partitions_ps_racks():
+    spec = rack_spine(4, 4, n_ps=2)
+    ps_homes = {spec.ps_rack(p) for p in range(spec.n_ps)}
+    s = LinkFaultSchedule.random(spec, 5.0, seed=7, link_down_rate=4.0,
+                                 flap_rate=4.0, degrade_rate=2.0,
+                                 partition_at=(0.5, 1.5, 2.5),
+                                 switch_crash_at=(1.0,))
+    assert len(s) > 0
+    for ev in s:
+        if ev.kind in ("link_down", "link_flap"):
+            assert "trunk" not in ev.target
+        if ev.kind == "partition":
+            r = int(ev.target[4:])
+            assert r not in ps_homes
+
+
+def test_max_concurrent_cut_replay():
+    assert max_concurrent_cut([]) == 0
+    # two overlapping auto-healed partitions on distinct racks
+    evs = [LinkFaultEvent(0.1, "partition", "rack2", recover_s=0.5),
+           LinkFaultEvent(0.3, "partition", "rack3", recover_s=0.5)]
+    assert max_concurrent_cut(evs) == 2
+    # sequential (no overlap)
+    evs = [LinkFaultEvent(0.1, "partition", "rack2", recover_s=0.1),
+           LinkFaultEvent(0.3, "partition", "rack3", recover_s=0.1)]
+    assert max_concurrent_cut(evs) == 1
+    # permanent cut closed by an explicit heal
+    evs = [LinkFaultEvent(0.1, "switch_crash", "rack1"),
+           LinkFaultEvent(0.2, "switch_recover", "rack1"),
+           LinkFaultEvent(0.3, "partition", "rack2", recover_s=1.0)]
+    assert max_concurrent_cut(evs) == 1
+    # unhealed cut stays open to infinity
+    evs = [LinkFaultEvent(0.1, "partition", "rack2"),
+           LinkFaultEvent(5.0, "partition", "rack3", recover_s=0.1)]
+    assert max_concurrent_cut(evs) == 2
+
+
+def _cut_ceiling_holds(seed, max_cut):
+    spec = rack_spine(4, 4, n_ps=1)
+    s = LinkFaultSchedule.random(
+        spec, 4.0, seed=seed,
+        partition_at=tuple(np.linspace(0.1, 3.5, 9)),
+        switch_crash_at=tuple(np.linspace(0.2, 3.6, 9)),
+        partition_heal_s=0.8, switch_recover_s=0.8, max_cut=max_cut)
+    ceiling = min(max_cut, spec.racks - 1)
+    assert max_concurrent_cut(s.events) <= ceiling
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**20), max_cut=st.integers(0, 6))
+    def test_drawn_schedules_respect_cut_ceiling(seed, max_cut):
+        """Property (DESIGN.md §14): a drawn timeline never severs more
+        racks concurrently than min(max_cut, racks - 1) — the fabric
+        mirror of FaultSchedule.random's min_active thinning."""
+        _cut_ceiling_holds(seed, max_cut)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    @pytest.mark.parametrize("max_cut", [0, 1, 2, 4])
+    def test_drawn_schedules_respect_cut_ceiling(seed, max_cut):
+        _cut_ceiling_holds(seed, max_cut)
+
+
+def test_netfault_schedule_from_config_wires_fields():
+    spec = rack_spine(4, 4, n_ps=1)
+    cfg = NetFaultConfig(flap_rate=3.0, partition_at=(0.5,),
+                         partition_heal_s=0.2, seed=9)
+    s = netfault_schedule_from_config(cfg, spec, 2.0)
+    kinds = {e.kind for e in s}
+    assert "link_flap" in kinds and "partition" in kinds
+    part = [e for e in s if e.kind == "partition"][0]
+    assert part.t == 0.5 and part.recover_s == 0.2
+
+
+# ---------------------------------------------------------------------------
+# pipe-level fault mechanics (generation fence, reroute, degrade)
+# ---------------------------------------------------------------------------
+
+
+def _pipe(sim, seed=0, loss=0.0):
+    return Pipe(sim, 1e9, 1e-3, loss=loss, queue_pkts=64,
+                rng=np.random.default_rng(seed))
+
+
+def _pkt(seq=0):
+    return Packet(flow=0, seq=seq, size=1500)
+
+
+def test_downed_pipe_fences_in_flight_and_blackholes_new_sends():
+    sim = Sim()
+    p = _pipe(sim)
+    p.faultable = True
+    got = []
+    assert p.send(_pkt(), got.append)
+    sim.after(1e-4, lambda: p.set_up(False))     # down while in flight
+    sim.run()
+    assert got == [] and p.n_dropped_down == 1   # fenced at arrival
+    # new sends on a downed pipe with no backup: swallowed silently
+    assert p.send(_pkt(1), got.append)
+    sim.run()
+    assert got == [] and p.n_dropped_down == 2
+
+
+def test_downed_pipe_reroutes_via_backup():
+    sim = Sim()
+    p, bk = _pipe(sim, 0), _pipe(sim, 1)
+    p.faultable = bk.faultable = True
+    p.backup = bk
+    p.set_up(False)
+    got = []
+    p.send(_pkt(), got.append)
+    sim.run()
+    assert len(got) == 1 and p.n_rerouted == 1
+    assert bk.bytes_delivered > 0
+    # partition: backup down too -> blackhole
+    bk.set_up(False)
+    p.send(_pkt(1), got.append)
+    sim.run()
+    assert len(got) == 1 and p.n_dropped_down == 1
+
+
+def test_degrade_cuts_rate_and_restores():
+    sim = Sim()
+    p = _pipe(sim)
+    base_rate, base_loss = p.rate, p.loss
+    p.set_degraded(rate_factor=0.25, extra_loss=0.1)
+    assert p.rate == pytest.approx(base_rate * 0.25)
+    assert p.loss == pytest.approx(base_loss + 0.1)
+    p.clear_degraded()
+    assert p.rate == base_rate and p.loss == base_loss
+
+
+def test_plane_installs_lazily_and_builds_backups():
+    sim = Sim()
+    spec = rack_spine(2, 2, n_ps=1)
+    from repro.net.scenarios import _build_topology
+    topo, _ = _build_topology(sim, NET, 4, spec,
+                              np.random.default_rng(0))
+    plane = NetFaultPlane(sim, topo, spec, seed=0)
+    assert not plane.installed
+    assert all(not p.faultable for p in topo.pipes.values())
+    plane.dispatch(LinkFaultEvent(0.0, "link_down", "rack1/up",
+                                  recover_s=0.01))
+    assert plane.installed
+    up = topo.pipes["rack1/up"]
+    assert up.backup is not None and not up.up and up.backup.up
+    assert plane.n_reroutes == 1      # the cut found a live backup
+    sim.run()
+    assert up.up                      # auto-recovery fired
+
+
+# ---------------------------------------------------------------------------
+# acceptance: zero-fault parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["bsp", "async"])
+def test_zero_netfault_run_is_record_identical(api, policy):
+    """Empty LinkFaultSchedule + no controller must be a structural
+    no-op: pipes stay unfaulted, senders keep unhealed timing, and both
+    the history and the telemetry stream match bitwise."""
+    base = _rt(api, policy=policy)
+    h0 = _run(base)
+    rt = _rt(api, policy=policy, net_faults=LinkFaultSchedule([]))
+    h1 = _run(rt)
+    assert h0 == h1
+    assert base.tel.events == rt.tel.events
+    assert rt.netfault_plane is None
+    assert all(not p.faultable for p in rt.net_des.topo.pipes.values())
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(base.params),
+                    jax.tree_util.tree_leaves(rt.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 16-worker chaos (flaps + switch crash + partition)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_schedule():
+    return LinkFaultSchedule([
+        LinkFaultEvent(0.05, "link_flap", "rack2/up", period_s=0.02,
+                       duty=0.5, duration_s=0.12),
+        LinkFaultEvent(0.10, "switch_crash", "rack1", recover_s=0.06),
+        LinkFaultEvent(0.20, "partition", "rack3", recover_s=0.15),
+        LinkFaultEvent(0.35, "link_degrade", "ps0/trunk",
+                       rate_factor=0.5, extra_loss=0.02, recover_s=0.1),
+    ])
+
+
+@pytest.mark.parametrize("policy", ["bsp", "async"])
+def test_chaos16_completes_conserves_and_replays(api, policy,
+                                                 chaos_forensics):
+    def go():
+        rt = chaos_forensics(_rt(
+            api, policy=policy, w=16, racks=4, n_ps=2, steps=4,
+            net_faults=_chaos_schedule(), seed=3,
+            budget=BudgetController(interval_s=0.03)))
+        h = _run(rt, steps=4, w=16)
+        return rt, h
+
+    rt, h = go()
+    assert len(h) > 0
+    _assert_conservation(rt)
+    for r in h:
+        assert np.isfinite(r["loss"])
+    if policy == "bsp":
+        assert [r["step"] for r in h] == list(range(4))
+    s = rt.tel.summary()
+    assert s["n_netfaults"] == len(_chaos_schedule())
+    assert s["n_reroutes"] + s["n_blackholes"] > 0
+    # bitwise replay from the same (seed, schedule)
+    rt2, h2 = go()
+    assert h == h2
+    assert rt.tel.events == rt2.tel.events
+
+
+# ---------------------------------------------------------------------------
+# acceptance: blackhole liveness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["bsp", "async"])
+def test_permanent_partition_aborts_flows_not_the_run(api, policy,
+                                                      chaos_forensics):
+    """A rack partitioned forever (uplink + backup both down, never
+    healed): its members' flows must abort via RTO backoff + blackhole
+    detection — bounded sim time, flow_dead telemetry, no gather
+    deadlock — while the surviving racks finish training."""
+    sched = LinkFaultSchedule([LinkFaultEvent(0.08, "partition", "rack1")])
+    rt = chaos_forensics(_rt(api, policy=policy, net_faults=sched, seed=3))
+    h = _run(rt)                          # completing at all IS the pin
+    assert len(h) > 0
+    _assert_conservation(rt)
+    dead = rt.tel.of("flow_dead")
+    assert dead, "no flow_dead despite a permanent partition"
+    # abort latency: blackhole detection is 6 consecutive backed-off
+    # watchdog RTOs. Worst case is a flow that never saw an ACK (rtprop
+    # unestimated -> 0.2s fallback base): 0.2*(1+2+4+8+16+16) = 9.4s.
+    # Pinned at 12s of the cut so estimator drift can't flake the suite.
+    assert min(e["t"] for e in dead) < 0.08 + 12.0
+    assert rt.tel.summary()["n_flow_dead"] == len(dead)
+    assert rt.net_des.flow_stats()["n_flow_dead"] > 0
+
+
+# ---------------------------------------------------------------------------
+# budget controller
+# ---------------------------------------------------------------------------
+
+
+def test_budget_controller_widens_under_distress_and_respects_floor(api):
+    rt = _rt(api, policy="bsp", w=16, racks=4, n_ps=2, steps=4, seed=3,
+             net_faults=_chaos_schedule(),
+             budget=BudgetController(floor=0.7, step=0.1,
+                                     interval_s=0.02))
+    _run(rt, steps=4, w=16)
+    moves = rt.tel.of("budget")
+    assert moves, "chaos run produced no controller moves"
+    assert any(m["direction"] == "widen" for m in moves)
+    base = LTPConfig().data_pct_threshold
+    for m in moves:
+        assert 0.7 - 1e-9 <= m["pct"] <= base + 1e-9
+    # actuation reached the transport
+    assert all(0.7 - 1e-9 <= v <= base + 1e-9
+               for v in rt.net_des.pct_eff)
+
+
+def test_budget_controller_idle_on_clean_run(api):
+    """No distress, thresholds already at the ceiling: the controller
+    must not move (and the run must match the controller-free twin)."""
+    base = _rt(api, policy="bsp")
+    h0 = _run(base)
+    rt = _rt(api, policy="bsp", budget=BudgetController(interval_s=0.05))
+    h1 = _run(rt)
+    assert rt.tel.of("budget") == []
+    assert [r["loss"] for r in h0] == [r["loss"] for r in h1]
+
+
+def test_budget_controller_requires_des(api):
+    tc = TrainConfig(batch=4 * W, lr=0.05, steps=2)
+    with pytest.raises(ValueError, match="transport='des'"):
+        ClusterRuntime(api, make_optimizer(tc), tc, LTPConfig(), NET,
+                       n_workers=W, transport="analytic",
+                       budget=BudgetController())
+
+
+def test_netfaults_require_des(api):
+    tc = TrainConfig(batch=4 * W, lr=0.05, steps=2)
+    with pytest.raises(ValueError, match="transport='des'"):
+        ClusterRuntime(api, make_optimizer(tc), tc, LTPConfig(), NET,
+                       n_workers=W, transport="analytic",
+                       net_faults=LinkFaultSchedule([]))
